@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks: validate Pallas kernels against oracles at a
+few shapes and report the TPU-target roofline prediction per kernel
+(this container is CPU-only — interpret-mode wall time is not kernel
+performance; the derived column carries the v5e-roofline estimate)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+from .common import emit
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def roofline_us(flops, nbytes):
+    return max(flops / PEAK, nbytes / HBM) * 1e6
+
+
+def main() -> None:
+    # rmsnorm: (4096, 4096) bf16
+    n, d = 4096, 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.bfloat16)
+    w = jnp.ones((d,), jnp.bfloat16)
+    got = rmsnorm_pallas(x[:128], w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.rmsnorm_ref(x[:128], w),
+                                          np.float32), atol=3e-2,
+                               rtol=3e-2)
+    emit("kernel_rmsnorm_4096x4096", roofline_us(4 * n * d, 4 * n * d),
+         f"v5e_roofline;bytes={4*n*d}")
+
+    # flash attention fwd: b1 h8 s2048 d128
+    b, h, s, dd = 1, 8, 2048, 128
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, 256, dd),
+                          jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, h, 256, dd),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, h, 256, dd),
+                          jnp.bfloat16)
+    got = flash_attention_fwd_pallas(q, k, v, causal=True, block_q=128,
+                                     block_kv=128, interpret=True)
+    want = ref.naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2,
+                               rtol=3e-2)
+    fl = 4 * b * h * s * s * dd // 2  # causal
+    byt = 2 * b * h * s * dd * 4
+    emit("kernel_flash_fwd_b1h8s2048d128", roofline_us(fl, byt),
+         f"v5e_roofline;flops={fl}")
+
+    # grouped matmul: E16 cap512 d1024 f2816
+    e, cap, d1, f = 16, 512, 1024, 2816
+    fl = 2 * e * cap * d1 * f
+    byt = 2 * (e * cap * d1 + e * d1 * f + e * cap * f)
+    emit("kernel_moe_gmm_e16", roofline_us(fl, byt),
+         f"v5e_roofline;arith_intensity={fl/byt:.1f}")
+
+    # mamba scan: B8 S2048 C8192 N16 — memory bound elementwise
+    bm, sm, cm, nm = 8, 2048, 8192, 16
+    fl = 6 * bm * sm * cm * nm
+    byt = 4 * bm * sm * cm * 3
+    emit("kernel_mamba_scan", roofline_us(fl, byt),
+         f"v5e_roofline;arith_intensity={fl/byt:.2f}")
+
+
+if __name__ == "__main__":
+    main()

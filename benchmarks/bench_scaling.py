@@ -1,0 +1,44 @@
+"""Paper Fig. 9: PP x DP scalability.  Global batch scales linearly with
+PP x DP; the simulator's throughput should track the linear-scaling
+line (the paper 'shows that Piper scales reasonably')."""
+from __future__ import annotations
+
+from repro.runtime.costmodel import CostModel
+from repro.runtime.simulator import TimelineSimulator
+
+from .common import build_pp_program, emit
+
+T_CHUNK = 5e-3
+
+
+def const_cost(node):
+    if node.dims.get("PASS") in ("Bi", "Bw"):
+        return T_CHUNK / 2
+    return T_CHUNK
+
+
+def main() -> None:
+    # weak scaling: the model itself grows with the PP degree (2*pp
+    # stages), so the linear reference is dp-scaling within each PP
+    # degree (the paper's Fig 9 scales global batch with PP x DP)
+    for pp in (2, 4, 8):
+        base_tput = None
+        for dp in (1, 2, 4):
+            n_mb = 4 * pp  # keep the bubble fraction ~constant
+            batch = n_mb * dp * 2
+            prog, _ = build_pp_program("1f1b", pp, n_mb, batch,
+                                       dp_per_rank=dp)
+            res = TimelineSimulator(
+                prog, CostModel(ici_bw=1e9, comm_latency=0.0),
+                chunk_seconds_override=const_cost).run()
+            tput = batch / res.makespan
+            if base_tput is None:
+                base_tput = tput / dp
+            linear = base_tput * dp
+            emit(f"fig9_pp{pp}_dp{dp}", res.makespan * 1e6,
+                 f"tokens_per_s={tput:.0f};linear={linear:.0f};"
+                 f"dp_scaling_efficiency={tput/linear:.2f}")
+
+
+if __name__ == "__main__":
+    main()

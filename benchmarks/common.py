@@ -1,0 +1,98 @@
+"""Shared benchmark utilities: the Piper-IR MoE pipeline model used by
+the schedule/memory benches (stage granularity mirrors the paper's
+Qwen3 experiments at interpreter scale), plus CSV emit helpers."""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import F, Order, Place, Replicate, Shard, compile_training
+from repro.core.schedules import (build_rank_sequences, emit_directives,
+                                  rank_of_stage)
+
+D = 32
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def stage_fn(p, x):
+    h = jnp.tanh(x @ p["w1"])
+    return jnp.tanh(h @ p["w2"])
+
+
+def loss_fn(p, x, y):
+    return jnp.mean((stage_fn(p, x) - y) ** 2)
+
+
+def make_params(n_stage, d=D, experts_every=0, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4 * n_stage)
+    params = {}
+    for i in range(n_stage):
+        params[f"stage{i}"] = {
+            "w1": jax.random.normal(ks[4 * i], (d, d)) * 0.1,
+            "w2": jax.random.normal(ks[4 * i + 1], (d, d)) * 0.1}
+        if experts_every and i % experts_every == 1 and i < n_stage - 1:
+            params[f"exp{i}"] = {
+                "w1": jax.random.normal(ks[4 * i + 2], (d, d)) * 0.1,
+                "w2": jax.random.normal(ks[4 * i + 3], (d, d)) * 0.1}
+    return params
+
+
+def make_forward(n_stage, experts_every=0):
+    def forward(rec, tvs):
+        h = tvs["x"]
+        for i in range(n_stage - 1):
+            with rec.annotate("pp"):
+                h = rec.region(stage_fn, f"stage{i}", name=f"s{i}")(h)
+                if experts_every and i % experts_every == 1:
+                    with rec.annotate("ep"):
+                        h = rec.region(stage_fn, f"exp{i}",
+                                       name=f"e{i}")(h)
+        with rec.annotate("pp"):
+            loss = rec.region(loss_fn, f"stage{n_stage-1}",
+                              name="head")(h, tvs["y"])
+        return loss
+    return forward
+
+
+def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
+                     dp_per_rank: int = 1, experts_every: int = 0,
+                     zero: int = 0, d=D, seed=0):
+    """Compile a Piper program: PP(kind) x DP(dp_per_rank) x optional EP,
+    with ZeRO level on the DP groups.  Every schedule kind runs the SAME
+    2R-stage model (1f1b/gpipe place two consecutive stages per rank) so
+    throughput comparisons are apples-to-apples."""
+    S = 2 * n_ranks
+    params = make_params(S, d, experts_every, seed)
+    fwd = make_forward(S, experts_every)
+    groups = [[r * dp_per_rank + i for i in range(dp_per_rank)]
+              for r in range(n_ranks)]
+    seqs = build_rank_sequences(kind, n_ranks, n_mb, S)
+    sched = emit_directives(kind, seqs, device_groups=groups, n_stages=S)
+    extra = []
+    if dp_per_rank > 1 or zero:
+        for s in range(S):
+            g = groups[rank_of_stage(kind, s, n_ranks, S)]
+            extra.append(Replicate(
+                F(**{"pp": s, "ep": "-"}), devices=g,
+                reduce_stream="dp", gather_stream="ag",
+                shard_grads=zero >= 2, shard_params=zero >= 3))
+            if experts_every and s % experts_every == 1 and s < S - 1:
+                extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
+                                   stream="ep"))
+    elif experts_every:
+        for s in range(S):
+            if s % experts_every == 1 and s < S - 1:
+                g = groups[rank_of_stage(kind, s, n_ranks, S)]
+                extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
+                                   stream="ep"))
+    sched = sched[:S] + extra + sched[S:]
+    inputs = {"x": ((batch, d), "float32"), "y": ((batch, d), "float32")}
+    prog = compile_training(fwd, params, inputs, sched,
+                            split_backward=(kind == "dualpipev"))
+    return prog, params

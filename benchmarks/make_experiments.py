@@ -1,0 +1,163 @@
+"""Assemble EXPERIMENTS.md from the dry-run result JSONs (both meshes,
+plus tagged hillclimb variants) and the hand-maintained narrative.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+ARCHS = ["minicpm-2b", "qwen1.5-0.5b", "qwen2.5-32b", "granite-20b",
+         "dbrx-132b", "deepseek-moe-16b", "falcon-mamba-7b",
+         "whisper-large-v3", "qwen2-vl-7b", "zamba2-2.7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+MOVE_DOWN = {
+    "minicpm-2b": "tied-embedding CE dominates bytes; fuse logits+CE "
+                  "and drop remat on the small stack",
+    "qwen1.5-0.5b": "CP attention dk/dv all-reduce + CE bytes; head-TP "
+                    "attention (kv=16 divides) removes the reductions",
+    "qwen2.5-32b": "remat recompute bytes; selective (attention-only) "
+                   "remat would cut ~30% of t_mem",
+    "granite-20b": "MQA replicates kv — CP already optimal; bytes from "
+                   "remat recompute",
+    "dbrx-132b": "MoE dispatch token copies are replicated over tp; a "
+                 "shard_map all-to-all dispatch removes the xt "
+                 "replication (biggest single lever)",
+    "deepseek-moe-16b": "64-expert dispatch buffers; same shard_map a2a "
+                        "lever as dbrx",
+    "falcon-mamba-7b": "SP boundary forces per-layer seq<->channel "
+                       "regathers; keep activations channel-sharded "
+                       "(seq_axis=None) for SSM archs",
+    "whisper-large-v3": "encoder runs unsharded seq 1500 (odd size); "
+                        "pad-to-divisible would let SP shard it",
+    "qwen2-vl-7b": "M-RoPE tables recomputed per layer under remat; "
+                   "hoist cos/sin outside the scan",
+    "zamba2-2.7b": "SSD chunk-state copies dominate bytes; larger "
+                   "ssm_chunk + head-TP attention on the shared block",
+}
+
+
+def load(arch, shape, mesh, tag=""):
+    name = f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+    p = RESULTS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def gb(x):
+    return f"{x/2**30:.2f}" if x else "-"
+
+
+def sec(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(mesh):
+    rows = [f"| arch | shape | status | compile | mem/dev | HLO GFLOP/dev "
+            f"| HLO GB/dev | coll GB/dev | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = load(a, s, mesh)
+            if r is None:
+                rows.append(f"| {a} | {s} | MISSING | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | {r['status']} | | | | | | |")
+                continue
+            coll = r.get("collective", {})
+            kinds = ",".join(f"{k}:{v}" for k, v in sorted(
+                coll.get("per_kind_count", {}).items()))
+            rows.append(
+                f"| {a} | {s} | ok | {r.get('compile_s', '-')}s "
+                f"| {r.get('memory', {}).get('per_device_total_gb', '-')}GB "
+                f"| {r.get('flops', 0)/1e9:.0f} "
+                f"| {gb(r.get('bytes_accessed', 0))} "
+                f"| {gb(coll.get('total_bytes', 0))} "
+                f"| {kinds} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="pod1"):
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "dominant | MODEL_FLOPs/HLO_FLOPs | to move the dominant "
+            "term down |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = load(a, s, mesh)
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r.get("roofline", {})
+            note = MOVE_DOWN.get(a, "") if s == "train_4k" else ""
+            rows.append(
+                f"| {a} | {s} | {sec(rf.get('t_compute_s'))} "
+                f"| {sec(rf.get('t_memory_s'))} "
+                f"| {sec(rf.get('t_collective_s'))} "
+                f"| {rf.get('dominant')} "
+                f"| {r.get('useful_flops_ratio', '-')} | {note} |")
+    return "\n".join(rows)
+
+
+def perf_variant_row(arch, shape, tag, label):
+    r = load(arch, shape, "pod1", tag)
+    if r is None or r.get("status") != "ok":
+        return f"| {label} | (failed/missing) | | | | |"
+    rf = r["roofline"]
+    mem = r.get("memory", {}).get("per_device_total_gb", "-")
+    dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    return (f"| {label} | {sec(rf['t_compute_s'])} "
+            f"| {sec(rf['t_memory_s'])} | {sec(rf['t_collective_s'])} "
+            f"| {mem}GB | {sec(dom)} |")
+
+
+def perf_table(arch, shape, variants):
+    rows = ["| variant | t_compute | t_memory | t_collective | mem/dev "
+            "| dominant term |",
+            "|---|---|---|---|---|---|",
+            perf_variant_row(arch, shape, "", "baseline (paper-faithful)")]
+    for tag, label in variants:
+        rows.append(perf_variant_row(arch, shape, tag, label))
+    return "\n".join(rows)
+
+
+def main():
+    out = TEMPLATE.format(
+        dryrun_pod1=dryrun_table("pod1"),
+        dryrun_pod2=dryrun_table("pod2"),
+        roofline=roofline_table(),
+        perf_zamba=perf_table("zamba2-2.7b", "train_4k", [
+            ("attn_tp", "B1: head-TP shared-attention (refuted)"),
+            ("rowfix", "B2: row-parallel SSM projections"),
+            ("best", "B3 = B2 + ssm_chunk 512 (best)"),
+        ]),
+        perf_falcon=perf_table("falcon-mamba-7b", "prefill_32k", [
+            ("nosp", "C1: drop SP boundary (refuted)"),
+            ("rowfix", "C2: row-parallel SSM projections (mixed)"),
+            ("best", "C3 = C2 + ssm_chunk 512"),
+        ]),
+        perf_dbrx=perf_table("dbrx-132b", "train_4k", [
+            ("attn_tp", "D1: head-TP attention (refuted)"),
+            ("lc1024", "D2: loss_chunk 1024 (refuted)"),
+            ("expertfix", "D3: expert ZeRO on output dim (refuted)"),
+            ("moe_a2a", "D4: shard_map all-to-all EP dispatch (best)"),
+        ]),
+    )
+    sys.stdout.write(out)
+
+
+TEMPLATE = open(pathlib.Path(__file__).parent /
+                "experiments_template.md").read()
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Roofline analysis over the dry-run results (task spec: ROOFLINE
+ANALYSIS).  Reads benchmarks/results/dryrun/*.json and renders:
+
+  - the three terms t_compute / t_memory / t_collective per cell,
+  - the dominant bottleneck,
+  - MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) vs HLO FLOPs,
+  - per-device memory.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--csv] [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+ARCH_ORDER = ["minicpm-2b", "qwen1.5-0.5b", "qwen2.5-32b", "granite-20b",
+              "dbrx-132b", "deepseek-moe-16b", "falcon-mamba-7b",
+              "whisper-large-v3", "qwen2-vl-7b", "zamba2-2.7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "pod1", tag: str = "") -> list[dict]:
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            name = f"{arch}__{shape}__{mesh}"
+            if tag:
+                name += f"__{tag}"
+            p = RESULTS / f"{name}.json"
+            if p.exists():
+                rows.append(json.loads(p.read_text()))
+            else:
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "missing"})
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render(rows, csv: bool = False) -> str:
+    out = []
+    if csv:
+        out.append("arch,shape,mesh,status,t_compute_s,t_memory_s,"
+                   "t_collective_s,dominant,mem_gb,flops,bytes,"
+                   "coll_bytes,useful_ratio")
+    else:
+        hdr = (f"{'arch':<18}{'shape':<13}{'status':<10}{'t_comp':>9}"
+               f"{'t_mem':>9}{'t_coll':>9} {'dominant':<11}"
+               f"{'mem/dev':>8}{'useful':>8}")
+        out.append(hdr)
+        out.append("-" * len(hdr))
+    for r in rows:
+        rf = r.get("roofline", {})
+        mem = r.get("memory", {}).get("per_device_total_gb")
+        if csv:
+            coll = r.get("collective", {}).get("total_bytes", "")
+            out.append(
+                f"{r['arch']},{r['shape']},{r.get('mesh')},{r['status']},"
+                f"{rf.get('t_compute_s','')},{rf.get('t_memory_s','')},"
+                f"{rf.get('t_collective_s','')},{rf.get('dominant','')},"
+                f"{mem or ''},{r.get('flops','')},"
+                f"{r.get('bytes_accessed','')},{coll},"
+                f"{r.get('useful_flops_ratio','')}")
+        else:
+            if r["status"] != "ok":
+                out.append(f"{r['arch']:<18}{r['shape']:<13}"
+                           f"{r['status']:<10}")
+                continue
+            out.append(
+                f"{r['arch']:<18}{r['shape']:<13}{r['status']:<10}"
+                f"{fmt_s(rf.get('t_compute_s')):>9}"
+                f"{fmt_s(rf.get('t_memory_s')):>9}"
+                f"{fmt_s(rf.get('t_collective_s')):>9} "
+                f"{rf.get('dominant',''):<11}"
+                f"{(f'{mem:.1f}GB' if mem is not None else '-'):>8}"
+                f"{(str(r.get('useful_flops_ratio','-'))):>8}")
+    return "\n".join(out)
+
+
+def roofline_fraction(r) -> float:
+    """useful model-flops time / max(three terms) — the score we climb."""
+    rf = r.get("roofline", {})
+    mf = r.get("model_flops_per_device")
+    if not mf or not rf:
+        return float("nan")
+    t_model = mf / 197e12
+    t_actual = max(rf["t_compute_s"], rf["t_memory_s"],
+                   rf["t_collective_s"])
+    return t_model / t_actual if t_actual else float("nan")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    rows = load(args.mesh, args.tag)
+    print(render(rows, args.csv))
+    fracs = [(f"{r['arch']}/{r['shape']}", roofline_fraction(r))
+             for r in rows if r["status"] == "ok"
+             and r.get("model_flops_per_device")]
+    fracs = [x for x in fracs if x[1] == x[1]]
+    if fracs:
+        print("\nroofline fraction (model-flops time / dominant term):")
+        for name, f in sorted(fracs, key=lambda x: x[1]):
+            print(f"  {name:<32} {f:6.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Benchmark aggregator — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    sections = []
+    from . import (bench_kernels, bench_parity, bench_pp_schedules,
+                   bench_pp_zero, bench_scaling)
+    sections = [
+        ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
+         bench_pp_schedules.main),
+        ("Table1+Fig8: PP x ZeRO support + peak memory",
+         bench_pp_zero.main),
+        ("Table2: DP ZeRO-1 parity + dispatch overhead",
+         bench_parity.main),
+        ("Fig9: PP x DP scaling", bench_scaling.main),
+        ("Kernels: Pallas vs oracle + v5e roofline", bench_kernels.main),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"# SECTION FAILED: {title}", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# ({time.time()-t0:.1f}s)")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""The paper's headline demo (Listings 1-2, Figures 1-4): an annotated
+MoE model scheduled with DualPipeV — PP x DP x EP with overlapped
+forward/backward microbatch pairs — compiled through the Piper IR,
+validated bit-for-bit against the unscheduled model, and timed on the
+TPU-constant simulator against interleaved-1F1B.
+
+  PYTHONPATH=src python examples/dualpipe_moe.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import F, Replicate, Shard, compile_training
+from repro.core.schedules import (build_rank_sequences, emit_directives,
+                                  rank_of_stage)
+from repro.runtime import Interpreter
+from repro.runtime.costmodel import CostModel
+from repro.runtime.simulator import TimelineSimulator
+
+jax.config.update("jax_platform_name", "cpu")
+
+D, BATCH, N_MB, R = 32, 32, 8, 2
+S = 2 * R  # DualPipeV V-placement: rank r hosts stages r and 2R-1-r
+
+
+# --- Listing 1: the annotated model -----------------------------------------
+def stage_fn(p, x):
+    return jnp.tanh(jnp.tanh(x @ p["w1"]) @ p["w2"])
+
+
+def loss_fn(p, x, y):
+    return jnp.mean((stage_fn(p, x) - y) ** 2)
+
+
+def forward(rec, tvs):
+    h = tvs["x"]
+    for i in range(S - 1):
+        with rec.annotate("pp"):                 # pipeline stage
+            h = rec.region(stage_fn, f"stage{i}", name=f"s{i}")(h)
+            if i % 2 == 1:
+                with rec.annotate("ep"):         # expert component
+                    h = rec.region(stage_fn, f"exp{i}", name=f"e{i}")(h)
+    with rec.annotate("pp"):
+        return rec.region(loss_fn, f"stage{S-1}", name="head")(
+            h, tvs["y"])
+
+
+def make_params(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4 * S)
+    p = {}
+    for i in range(S):
+        p[f"stage{i}"] = {"w1": jax.random.normal(ks[4*i], (D, D)) * .1,
+                          "w2": jax.random.normal(ks[4*i+1], (D, D)) * .1}
+        if i % 2 == 1 and i < S - 1:
+            p[f"exp{i}"] = {"w1": jax.random.normal(ks[4*i+2], (D, D)) * .1,
+                            "w2": jax.random.normal(ks[4*i+3], (D, D)) * .1}
+    return p
+
+
+# --- Listing 2: the schedule -------------------------------------------------
+def schedule(kind):
+    groups = [[2*r, 2*r+1] for r in range(R)]   # DP-2 per PP rank
+    seqs = build_rank_sequences(kind, R, N_MB, S)
+    sched = emit_directives(kind, seqs, device_groups=groups, n_stages=S)
+    extra = []
+    for s in range(S):
+        g = groups[rank_of_stage(kind, s, R, S)]
+        extra.append(Replicate(F(pp=s, ep="-"), devices=g,
+                               reduce_stream="dp"))       # DP for attn
+        if s % 2 == 1 and s < S - 1:
+            extra.append(Shard(F(pp=s, ep="*"), devices=g,
+                               stream="ep"))              # EP for experts
+    return sched[:S] + extra + sched[S:]
+
+
+def main():
+    params = make_params()
+    inputs = {"x": ((BATCH, D), "float32"), "y": ((BATCH, D), "float32")}
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, D))
+    y = jax.random.normal(jax.random.PRNGKey(2), (BATCH, D))
+
+    # oracle: the unscheduled model
+    def full(p):
+        h = x
+        for i in range(S - 1):
+            h = stage_fn(p[f"stage{i}"], h)
+            if i % 2 == 1:
+                h = stage_fn(p[f"exp{i}"], h)
+        return loss_fn(p[f"stage{S-1}"], h, y)
+    l_ref = float(full(params))
+
+    results = {}
+    for kind in ("1f1b", "interleaved_1f1b", "dualpipev"):
+        prog = compile_training(forward, params, inputs, schedule(kind),
+                                split_backward=(kind == "dualpipev"))
+        res = Interpreter(prog).run({"x": x, "y": y})
+        assert abs(res.loss - l_ref) < 1e-6, (kind, res.loss, l_ref)
+        sim = TimelineSimulator(
+            prog, CostModel(ici_bw=2.5e4, comm_latency=0.0),
+            chunk_seconds_override=lambda n: (
+                5e-3 if n.dims.get("PASS") in ("Bi", "Bw") else 1e-2))
+        t = sim.run()
+        results[kind] = t.makespan
+        print(f"{kind:<18} loss={res.loss:.6f} (oracle {l_ref:.6f})  "
+              f"makespan={t.makespan*1e3:.1f} ms  "
+              f"peak_mem(dev0)={res.ledgers[0].peak/1024:.0f} KiB "
+              f"[{prog.stats['chunks']} chunks, {prog.stats['comms']} comms]")
+    gain = 1 - results["dualpipev"] / results["interleaved_1f1b"]
+    print(f"\nDualPipeV vs interleaved-1F1B: {gain*100:+.1f}% "
+          f"(paper: +10-13% with EP comm on the critical path)")
+
+
+if __name__ == "__main__":
+    main()

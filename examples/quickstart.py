@@ -1,0 +1,17 @@
+"""Quickstart: train a tiny reduced-config model end-to-end on CPU with
+the full substrate (data pipeline, AdamW+cosine, checkpoint/restart).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--arch", "qwen1.5-0.5b",
+        "--steps", "100",
+        "--batch", "8", "--seq", "64",
+        "--d-model", "128", "--layers", "2", "--vocab", "512",
+        "--ckpt-dir", "/tmp/repro_quickstart",
+    ]))

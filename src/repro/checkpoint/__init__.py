@@ -1,0 +1,4 @@
+"""Sharded checkpointing with async writes + elastic restore."""
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

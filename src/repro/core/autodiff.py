@@ -1,0 +1,189 @@
+"""Backward-chunk construction (paper §4.2 phase 1).
+
+The paper relies on the PyTorch autograd engine to produce opaque backward
+graphs per Chunk.  Here each backward Chunk is an explicit JAX callable
+built with ``jax.vjp`` over the forward chunk's exec function.
+
+Residual policy (DESIGN.md §2): the default is *per-chunk rematerialization*
+— a backward chunk re-runs its forward under ``jax.vjp`` from the chunk's
+**inputs** (boundary activations).  Thus the residual edges of the IR are
+exactly the chunk-boundary activations, which is what pipeline-parallel
+systems stash between forward and backward; intra-chunk activation memory is
+a compute/memory tradeoff handled by remat policy, not by the IR.
+
+Backward chunk slot convention for a forward chunk with m inputs, k outputs:
+  inputs : [fwd_in_0 … fwd_in_{m-1}, cot_out_0 … cot_out_{k-1}]
+  outputs: [bucket_grads, cot_in_0 … cot_in_{m-1}]
+
+Cotangent plumbing:
+  - a loss output slot gets its cotangent seeded to 1.0 by the runtime
+    (``meta["seed_slots"]``);
+  - a forward output with no consumer gets a zero cotangent
+    (``meta["zero_cot_slots"]``);
+  - a forward output with multiple consumers receives multiple cotangent
+    edges on the same slot; the runtime sums them;
+  - cotangents produced for graph inputs (data) are discarded.
+"""
+from __future__ import annotations
+
+import jax
+
+from .dag import PASS_B, PASS_F, TrainingDAG, ValueSpec
+from .trace import PASS_DIM
+
+
+def _make_bwd_fn(fwd_fn, m: int, k: int, has_bucket: bool):
+    def bwd(bucket, *args):
+        ins, cots = args[:m], args[m:]
+        if has_bucket:
+            _, vjp = jax.vjp(lambda b, *i: fwd_fn(b, *i), bucket, *ins)
+            grads = vjp(tuple(cots))
+            bucket_grads, in_cots = grads[0], grads[1:]
+        else:
+            _, vjp = jax.vjp(lambda *i: fwd_fn(None, *i), *ins)
+            in_cots = vjp(tuple(cots))
+            bucket_grads = None
+        return (bucket_grads,) + tuple(in_cots)
+    bwd.__name__ = f"bwd_{getattr(fwd_fn, '__name__', 'chunk')}"
+    return bwd
+
+
+def _make_bi_fn(fwd_fn, m: int):
+    """Backward-for-inputs (ZeroBubble 'B'): input cotangents only."""
+    def bi(bucket, *args):
+        ins, cots = args[:m], args[m:]
+        _, vjp = jax.vjp(lambda *i: fwd_fn(bucket, *i), *ins)
+        in_cots = vjp(tuple(cots))
+        return (None,) + tuple(in_cots)
+    bi.__name__ = f"bi_{getattr(fwd_fn, '__name__', 'chunk')}"
+    return bi
+
+
+def _make_bw_fn(fwd_fn, m: int):
+    """Backward-for-weights (ZeroBubble 'W'): bucket grads only."""
+    def bw(bucket, *args):
+        ins, cots = args[:m], args[m:]
+        _, vjp = jax.vjp(lambda b: fwd_fn(b, *ins), bucket)
+        (bucket_grads,) = vjp(tuple(cots))
+        return (bucket_grads,) + (None,) * m
+    bw.__name__ = f"bw_{getattr(fwd_fn, '__name__', 'chunk')}"
+    return bw
+
+
+def build_backward(dag: TrainingDAG, split_backward: bool = False) -> None:
+    """Append backward chunks (reverse topo order) + cotangent edges.
+
+    ``split_backward=True`` emits ZeroBubble-style Bi (backward-for-
+    inputs, PASS="Bi") + Bw (backward-for-weights, PASS="Bw") chunk pairs
+    for bucketed chunks instead of a joint B chunk — the mechanism behind
+    ZeroBubble and DualPipeV schedules (paper §4.1 PASS dimension).
+
+    Must run on the single-device DAG, before any directives."""
+    fwd_ids = [nid for nid in dag.toposort()
+               if dag.nodes[nid].is_chunk
+               and dag.nodes[nid].dims.get(PASS_DIM) == PASS_F]
+    loss_slots = set(dag.outputs)
+
+    # per fwd chunk: slot -> ("edge", Edge) | ("input", name)
+    def input_feeds(nid):
+        feeds = {}
+        for e in dag.in_edges(nid):
+            if e.dst_in >= 0:
+                feeds[e.dst_in] = ("edge", e)
+        for name, (spec, consumers) in dag.inputs.items():
+            for (cnid, cslot) in consumers:
+                if cnid == nid:
+                    feeds[cslot] = ("input", name, spec)
+        return feeds
+
+    # (fwd_node, out_slot) -> [(bwd_node, bwd_out_slot)] cotangent producers
+    cot_sources: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    bwd_of: dict[int, int] = {}
+
+    for nid in reversed(fwd_ids):
+        fwd = dag.nodes[nid]
+        feeds = input_feeds(nid)
+        m = fwd.meta.get("n_inputs", len(feeds))
+        if set(feeds) != set(range(m)):
+            raise ValueError(
+                f"chunk {fwd.short()} has unfed input slots: "
+                f"expected {m}, fed {sorted(feeds)}")
+        k = fwd.n_outputs
+        grads_bytes = dag.bucket_of(fwd.bucket).param_bytes if fwd.bucket else 0
+        grad_spec = ValueSpec((max(grads_bytes // 4, 1),), "float32")
+
+        def feed_spec(j):
+            f = feeds[j]
+            return f[1].spec if f[0] == "edge" else f[2]
+
+        def make_side(pass_tag: str, fn, produce_cots: bool,
+                      produce_grads: bool):
+            dims = {d: v for d, v in fwd.dims.items() if d != PASS_DIM}
+            dims[PASS_DIM] = pass_tag
+            node = dag.new_node(
+                kind="chunk",
+                name=f"{pass_tag.lower()}_{fwd.name}",
+                dims=dims,
+                fn=fn,
+                bucket=fwd.bucket,
+                n_outputs=1 + m,
+                out_specs=[grad_spec] + [feed_spec(j) for j in range(m)],
+                meta={"fwd_node": nid, "n_inputs": m + k,
+                      "is_backward": True},
+            )
+            # residual edges: forward inputs flow to the backward chunk too
+            for j in range(m):
+                f = feeds[j]
+                if f[0] == "edge":
+                    e = f[1]
+                    dag.add_edge(e.src, e.src_out, node.id, j, e.spec)
+                else:
+                    name = f[1]
+                    spec, consumers = dag.inputs[name]
+                    dag.inputs[name] = (spec, consumers + [(node.id, j)])
+                    node.meta.setdefault("discard_out_slots",
+                                         []).append(1 + j)
+            # cotangent input edges: one per forward output slot
+            for out_slot in range(k):
+                if (nid, out_slot) in loss_slots:
+                    node.meta.setdefault("seed_slots",
+                                         []).append(m + out_slot)
+                    continue
+                srcs = cot_sources.get((nid, out_slot), [])
+                if not srcs:
+                    node.meta.setdefault("zero_cot_slots",
+                                         []).append(m + out_slot)
+                    continue
+                for (src_node, src_slot) in srcs:
+                    dag.add_edge(src_node, src_slot, node.id, m + out_slot,
+                                 fwd.out_specs[out_slot])
+            if produce_grads and fwd.bucket:
+                dag.grad_sinks.setdefault(fwd.bucket,
+                                          []).append((node.id, 0))
+            return node
+
+        split = split_backward and fwd.bucket is not None
+        if split:
+            bi = make_side("Bi", _make_bi_fn(fwd.fn, m),
+                           produce_cots=True, produce_grads=False)
+            bw = make_side("Bw", _make_bw_fn(fwd.fn, m),
+                           produce_cots=False, produce_grads=True)
+            main_bwd = bi
+            fwd.meta["bwd_node"] = bi.id
+            fwd.meta["bw_node"] = bw.id
+        else:
+            main_bwd = make_side(
+                PASS_B, _make_bwd_fn(fwd.fn, m, k, fwd.bucket is not None),
+                produce_cots=True, produce_grads=True)
+            fwd.meta["bwd_node"] = main_bwd.id
+        bwd_of[nid] = main_bwd.id
+
+        # register cotangents the Bi/B chunk produces for upstream values
+        for j in range(m):
+            f = feeds[j]
+            if f[0] == "edge":
+                e = f[1]
+                cot_sources.setdefault((e.src, e.src_out), []).append(
+                    (main_bwd.id, 1 + j))
+
+    dag.meta["bwd_of"] = bwd_of

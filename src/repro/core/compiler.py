@@ -1,0 +1,64 @@
+"""The Piper compiler (paper §4.2): annotated model + schedule -> plans.
+
+Phase 1: trace the annotated model into a single-device DAG of forward
+Chunks and build per-chunk backward Chunks.
+Phase 2: apply the user's scheduling directives in order, then run the
+finalization passes (p2p insertion, all-gather elision, reduce merging,
+stream defaults) and hand the DAG to the centralized scheduler.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+from . import passes
+from .autodiff import build_backward
+from .dag import TrainingDAG
+from .directives import Directive
+from .plan import GlobalPlan
+from .scheduler import build_plan
+from .trace import Recorder
+
+
+@dataclass
+class CompiledProgram:
+    dag: TrainingDAG
+    plan: GlobalPlan
+    params: dict[str, Any]
+    schedule: Sequence[Directive]
+    stats: dict[str, Any] = field(default_factory=dict)
+
+
+def compile_training(
+    forward: Callable[[Recorder, dict], Any],
+    params: dict[str, Any],
+    inputs: dict[str, tuple],
+    schedule: Sequence[Directive] = (),
+    build_bwd: bool = True,
+    split_backward: bool = False,
+) -> CompiledProgram:
+    """``forward(rec, tvs)`` builds the model using ``rec.annotate`` /
+    ``rec.region`` and returns the loss TracedValue.  ``inputs`` maps graph
+    input name -> (shape, dtype).  ``split_backward`` emits ZeroBubble
+    Bi/Bw chunk pairs (needed by dualpipev schedules)."""
+    rec = Recorder(params)
+    tvs = {name: rec.input(name, shape, dtype)
+           for name, (shape, dtype) in inputs.items()}
+    loss = forward(rec, tvs)
+    dag = rec.finalize(*(loss if isinstance(loss, tuple) else (loss,)))
+
+    if build_bwd:
+        build_backward(dag, split_backward=split_backward)
+
+    for directive in schedule:
+        directive.apply(dag)
+
+    passes.run_all(dag)
+    plan = build_plan(dag)
+    prog = CompiledProgram(dag=dag, plan=plan, params=params,
+                           schedule=tuple(schedule))
+    prog.stats = {**dag.stats(),
+                  "devices": len(plan.devices),
+                  "elided_allgathers": dag.meta.get("elided_allgathers", 0),
+                  "merged_reduces": dag.meta.get("merged_reduces", 0)}
+    return prog

@@ -1,0 +1,75 @@
+"""Filter algebra for Piper scheduling directives (paper §4.1).
+
+A filter is a mapping ``dim -> value`` where value is:
+  - a concrete index/value (``PP=0``, ``PASS="F"``),
+  - ``"*"``  : match every node that HAS the tag,
+  - ``"-"``  : match only nodes that do NOT have the tag.
+Omitting a dim from the filter matches all occurrences of that dim
+(present or absent).  ``PASS=*`` is implied unless specified.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+from .dag import Node, TrainingDAG
+
+MATCH_ALL = "*"
+MATCH_NONE = "-"
+
+
+class F:
+    """A node filter, e.g. ``F(pp=1, ep="-")`` == paper's ``(PP=1, EP=-)``."""
+
+    def __init__(self, **spec: Any) -> None:
+        self.spec = dict(spec)
+
+    def matches(self, node: Node) -> bool:
+        for dim, val in self.spec.items():
+            has = dim in node.dims
+            if val == MATCH_NONE:
+                if has:
+                    return False
+            elif val == MATCH_ALL:
+                if not has:
+                    return False
+            else:
+                if not has or node.dims[dim] != val:
+                    return False
+        return True
+
+    def select(self, dag: TrainingDAG) -> list[int]:
+        return [nid for nid in dag.toposort()
+                if self.matches(dag.nodes[nid])]
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}={v}" for k, v in self.spec.items())
+        return f"F({inner})"
+
+
+def as_filter(f) -> F:
+    if isinstance(f, F):
+        return f
+    if isinstance(f, dict):
+        return F(**f)
+    raise TypeError(f"cannot interpret {f!r} as a filter")
+
+
+def select_union(dag: TrainingDAG, filters: Iterable[F]) -> list[int]:
+    seen: set[int] = set()
+    out: list[int] = []
+    for f in filters:
+        for nid in as_filter(f).select(dag):
+            if nid not in seen:
+                seen.add(nid)
+                out.append(nid)
+    return out
+
+
+def sources_within(dag: TrainingDAG, sub: set[int]) -> list[int]:
+    """Nodes in ``sub`` with no predecessor inside ``sub``."""
+    return [nid for nid in sub if not (dag.preds(nid) & sub)]
+
+
+def sinks_within(dag: TrainingDAG, sub: set[int]) -> list[int]:
+    """Nodes in ``sub`` with no successor inside ``sub``."""
+    return [nid for nid in sub if not (dag.succs(nid) & sub)]

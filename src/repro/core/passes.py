@@ -1,0 +1,159 @@
+"""Compiler finalization passes (paper §4.2 phase 2 tail).
+
+  insert_p2p         — send/recv comms at cross-placement data edges
+  elide_allgathers   — collapse duplicate param all-gathers (ZeRO-3)
+  merge_grad_reduces — collapse per-microbatch all-reduces into one
+                       accumulated reduce (classic grad accumulation);
+                       ZeRO-2 reduce-scatters are kept per-microbatch so
+                       full-gradient buffers can be freed (paper §6.2)
+  assign_default_streams — unassigned nodes run on the default stream
+"""
+from __future__ import annotations
+
+from .dag import PASS_B, TrainingDAG, ValueSpec
+
+DEFAULT_STREAM = "main"
+
+
+def insert_p2p(dag: TrainingDAG) -> None:
+    """Insert p2p comm nodes on data edges whose endpoints have different
+    placements.  Replicated groups transfer pairwise (rank i -> rank i).
+
+    A value consumed by several nodes on the same destination placement is
+    sent ONCE and retained on the receiver (the runtime frees it after the
+    last consumer) — e.g. a stage boundary activation consumed by both the
+    next stage's forward and (as residual) its backward."""
+    p2p_streams = dag.meta.get("p2p_streams", {})
+    # (src_node, src_out, dst_devices) -> p2p comm node
+    existing: dict[tuple, int] = {}
+    for e in list(dag.edges):
+        src, dst = dag.nodes[e.src], dag.nodes[e.dst]
+        if src.devices is None or dst.devices is None:
+            continue
+        if tuple(src.devices) == tuple(dst.devices):
+            continue
+        if (src.is_comm and src.op == "p2p") or (
+                dst.is_comm and dst.op == "p2p"):
+            continue
+        sd, dd = tuple(src.devices), tuple(dst.devices)
+        if set(sd) & set(dd):
+            raise ValueError(
+                f"overlapping-but-unequal placements {sd} -> {dd} between "
+                f"{src.short()} and {dst.short()}: Shard/Replicate devices "
+                "must match their neighbours' placement (paper §4.1: 'this "
+                "requires that the preceding or subsequent Chunk has the "
+                "same devices')")
+        key = (e.src, e.src_out, dd)
+        if key in existing:
+            comm_id = existing[key]
+            dag.edges.remove(e)
+            dag.add_edge(comm_id, 0, e.dst, e.dst_in, e.spec)
+            continue
+        if len(sd) == len(dd):
+            pairs = list(zip(sd, dd))
+        elif len(sd) == 1:
+            pairs = [(sd[0], d) for d in dd]
+        elif len(dd) == 1:
+            pairs = [(s, dd[0]) for s in sd]
+        else:
+            raise ValueError(
+                f"cannot pair devices {sd} -> {dd} for p2p between "
+                f"{src.short()} and {dst.short()}")
+        # stream intent survives Split via node.meta (the id-keyed map
+        # only covers pre-Split nodes)
+        stream = (src.meta.get("p2p_stream") or dst.meta.get("p2p_stream")
+                  or p2p_streams.get(e.src) or p2p_streams.get(e.dst))
+        comm = dag.new_node(
+            kind="comm", op="p2p", name=f"p2p:{src.name}->{dst.name}",
+            dims=dict(dst.dims), devices=tuple(sd) + tuple(dd),
+            stream=stream, payload="act", out_specs=[e.spec],
+            meta={"pairs": pairs})
+        dag.splice_comm_on_edge(e, comm)
+        existing[key] = comm.id
+
+
+def elide_allgathers(dag: TrainingDAG) -> None:
+    """If two directly adjacent chunks consume the same (ZeRO-3 sharded)
+    bucket, drop the second all-gather and extend the first buffer's
+    lifetime (paper: 'collapses these into one allgather')."""
+    for e in list(dag.edges):
+        src, dst = dag.nodes.get(e.src), dag.nodes.get(e.dst)
+        if src is None or dst is None or not (src.is_chunk and dst.is_chunk):
+            continue
+        if not src.bucket or src.bucket != dst.bucket:
+            continue
+        g_src = src.meta.get("param_from_comm")
+        g_dst = dst.meta.get("param_from_comm")
+        if g_src is None or g_dst is None or g_src == g_dst:
+            continue
+        if dag.nodes[g_src].devices != dag.nodes[g_dst].devices:
+            continue
+        dag.remove_node(g_dst)
+        dst.meta["param_from_comm"] = g_src
+        dag.meta.setdefault("elided_allgathers", 0)
+        dag.meta["elided_allgathers"] += 1
+
+
+def merge_grad_reduces(dag: TrainingDAG) -> None:
+    """Collapse per-microbatch gradient all-reduces of a bucket into one
+    accumulated all-reduce after the last backward chunk.  Only applies to
+    unsharded gradients; ZeRO-2 reduce-scatters stay per-microbatch (the
+    paper reduces 'after every backward pass instead of accumulating' to
+    realize the memory savings)."""
+    topo_pos = {nid: i for i, nid in enumerate(dag.toposort())}
+    for bucket, b in dag.buckets.items():
+        if b.replica_devices is None or b.shard_grads:
+            continue
+        ars = [n for n in dag.comms()
+               if n.op == "all_reduce" and n.meta.get("bucket") == bucket]
+        by_part: dict[int, list] = {}
+        for n in ars:
+            by_part.setdefault(n.meta.get("part", 0), []).append(n)
+        new_sinks = []
+        for part, group in sorted(by_part.items()):
+            if len(group) <= 1:
+                if group:
+                    new_sinks.append((group[0].id, 0))
+                continue
+            group.sort(key=lambda n: topo_pos[n.id])
+            keep = group[-1]
+            producers = []
+            for n in group:
+                for e in dag.in_edges(n.id):
+                    producers.append(e.src)
+            for n in group[:-1]:
+                dag.remove_node(n.id)
+            keep.meta["accumulated"] = True
+            keep.meta["n_accumulated"] = len(group)
+            for p in producers:
+                if p != keep.id and p in dag.nodes:
+                    dag.add_temporal(p, keep.id)
+            new_sinks.append((keep.id, 0))
+            dag.meta.setdefault("merged_reduces", 0)
+            dag.meta["merged_reduces"] += len(group) - 1
+        if new_sinks:
+            dag.grad_sinks[bucket] = new_sinks
+
+
+def assign_default_streams(dag: TrainingDAG) -> None:
+    for n in dag.nodes.values():
+        if n.stream is None:
+            n.stream = DEFAULT_STREAM
+
+
+def assign_default_devices(dag: TrainingDAG) -> None:
+    """Nodes untouched by placement directives run on device 0 (the paper
+    validates all placements are present; we default like its future-work
+    propagation note, but only to the trivial single device)."""
+    for n in dag.nodes.values():
+        if n.devices is None:
+            n.devices = dag.default_devices
+
+
+def run_all(dag: TrainingDAG) -> None:
+    assign_default_devices(dag)
+    insert_p2p(dag)
+    elide_allgathers(dag)
+    merge_grad_reduces(dag)
+    assign_default_streams(dag)
+    dag.validate()

@@ -1,0 +1,6 @@
+"""Deterministic, shardable, checkpointable token data pipeline."""
+from .pipeline import DataState, MemmapTokenSource, SyntheticTokenSource, \
+    TokenLoader
+
+__all__ = ["DataState", "MemmapTokenSource", "SyntheticTokenSource",
+           "TokenLoader"]

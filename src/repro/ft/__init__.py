@@ -1,0 +1,5 @@
+"""Fault tolerance: supervised training loop, failure injection,
+straggler watchdog, elastic restart."""
+from .supervisor import FailureInjector, StragglerWatchdog, Supervisor
+
+__all__ = ["FailureInjector", "StragglerWatchdog", "Supervisor"]

@@ -1,0 +1,84 @@
+"""Selective-scan (Mamba1) Pallas kernel.
+
+The recurrence h_t = exp(dt_t*A) * h_{t-1} + dt_t*B_t*x_t is independent
+per channel, so the grid tiles (batch, channel-blocks); each kernel
+instance keeps its (BLOCK_C, N) state in VMEM and runs a fori_loop over
+the sequence.  The decay terms are built per-step in registers — the
+(S, C, N) tensor the naive lowering materializes never exists.
+
+TPU adaptation note (DESIGN.md §6): CUDA Mamba kernels parallelize the
+scan across warps with shuffles; the TPU-native structure is
+channel-block parallelism over the grid with a sequential VMEM-resident
+inner loop (the VPU pipelines the elementwise recurrence), plus the
+chunked formulation at the JAX level for sequence-level parallelism.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_C = 128
+
+
+def mamba_scan_pallas(xz, dt, A, B, C, D, h0=None,
+                      block_c: int = BLOCK_C,
+                      interpret: bool = True):
+    """Same contract as models.layers.ssm_scan_ref:
+    xz/dt: (B,S,C); A: (C,N); B,C: (B,S,N); D: (C,).
+    Returns (y (B,S,C), hT (B,C,N))."""
+    b, s, c = xz.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, c, n), jnp.float32)
+    bc = min(block_c, c)
+    while c % bc:
+        bc //= 2
+    bc = max(bc, 1)
+    # channel-major layout for clean (bc,) slices per step
+    xt = xz.swapaxes(1, 2)        # (B, C, S)
+    dtt = dt.swapaxes(1, 2)
+
+    def kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, h0_ref, y_ref, hT_ref):
+        A_blk = A_ref[...].astype(jnp.float32)
+        h = h0_ref[0].astype(jnp.float32)
+
+        def step(t, h):
+            x_t = x_ref[0, :, t].astype(jnp.float32)
+            dt_t = dt_ref[0, :, t].astype(jnp.float32)
+            B_t = B_ref[0, t].astype(jnp.float32)
+            C_t = C_ref[0, t].astype(jnp.float32)
+            dA = jnp.exp(dt_t[:, None] * A_blk)
+            h = h * dA + (dt_t * x_t)[:, None] * B_t[None, :]
+            y_ref[0, :, t] = (h @ C_t).astype(y_ref.dtype)
+            return h
+
+        hT = jax.lax.fori_loop(0, s, step, h)
+        hT_ref[0] = hT.astype(hT_ref.dtype)
+
+    y_cm, hT = pl.pallas_call(
+        kernel,
+        grid=(b, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bc, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bc, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bc, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bc, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bc, n), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, s), xz.dtype),
+            jax.ShapeDtypeStruct((b, c, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, A, B, C, h0)
+    y = y_cm.swapaxes(1, 2) + xz * D.astype(xz.dtype)
+    return y, hT

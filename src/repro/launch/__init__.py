@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, input specs, SPMD steps, dry-run."""

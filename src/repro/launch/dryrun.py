@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (task spec: MULTI-POD DRY-RUN).
+
+For each (architecture x input shape x mesh) cell:
+  lower  -> jax.jit(step, in_shardings, out_shardings).lower(*avals)
+  compile-> lowered.compile()
+  report -> memory_analysis(), cost_analysis(), collective bytes from the
+            per-device HLO, and the derived roofline terms.
+
+Run a single cell:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh pod1
+Run everything (sequentially, caching into benchmarks/results/dryrun):
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+NOTE the XLA_FLAGS line above MUST precede any jax import: jax locks the
+device count at first init.  Smoke tests / benches import jax without
+this module and see 1 device.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, cell_status, dryrun_config
+from repro.launch.steps import lower_cell, strategy_for
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+# TPU v5e constants (task spec)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def roofline_terms(cell: dict, chips: int) -> dict:
+    flops = cell.get("flops", 0.0)
+    nbytes = cell.get("bytes_accessed", 0.0)
+    coll = cell.get("collective", {}).get("total_bytes", 0)
+    # cost_analysis on the partitioned module is per-device already;
+    # guard with per_device flag
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_collective = coll / LINK_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_collective), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_collective, "dominant": dom}
+
+
+def _cell_metrics(cfg, mesh, strat, shape) -> dict:
+    """lower+compile one variant and extract cost/collective stats."""
+    import dataclasses
+
+    lowered = lower_cell(cfg, mesh, strat, shape)
+    compiled = lowered.compile()
+    m: dict = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        m["flops"] = float(ca.get("flops", 0.0))
+        m["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:
+        m["cost_error"] = str(e)
+    try:
+        m["collective"] = hlo_stats.collective_bytes(compiled.as_text())
+    except Exception as e:
+        m["hlo_error"] = str(e)
+    return m
+
+
+def probe_metrics(cfg, mesh, strat, shape) -> dict:
+    """Trip-count-corrected FLOPs/bytes/collective bytes.
+
+    XLA cost_analysis counts a while-loop body ONCE; our stacks are
+    rolled scans, so the full compile undercounts by ~n_layers.  Two
+    probe compiles at (k, 2k) layers with every scan UNROLLED give
+    metric(L) = base + L*per_layer exactly (homogeneous stacks).  The
+    SSM per-step elementwise recurrence inside a chunk stays rolled
+    (unrolling 4096 steps is uncompilable) — a documented, small
+    undercount of non-matmul FLOPs."""
+    import dataclasses
+
+    k = cfg.hybrid_every if cfg.hybrid_every else 2
+    L = cfg.n_layers
+
+    def probe_cfg(n):
+        kw = {"n_layers": n, "unroll_scans": True}
+        if cfg.n_enc_layers:
+            kw["n_enc_layers"] = n
+        return dataclasses.replace(cfg, **kw)
+
+    mA = _cell_metrics(probe_cfg(k), mesh, strat, shape)
+    mB = _cell_metrics(probe_cfg(2 * k), mesh, strat, shape)
+    if "flops" not in mA or "flops" not in mB:
+        return {"probe_error": mA.get("cost_error", "")
+                or mB.get("cost_error", "")}
+
+    def extrapolate(a, b):
+        per = (b - a) / k
+        return max(a + (L - k) * per, 0.0)
+
+    out = {
+        "flops": extrapolate(mA["flops"], mB["flops"]),
+        "bytes_accessed": extrapolate(mA["bytes_accessed"],
+                                      mB["bytes_accessed"]),
+        "probe_layers": [k, 2 * k],
+    }
+    ca = mA.get("collective", {})
+    cb = mB.get("collective", {})
+    if ca and cb:
+        per_kind = {}
+        for kind in set(ca["per_kind_bytes"]) | set(cb["per_kind_bytes"]):
+            per_kind[kind] = int(extrapolate(
+                ca["per_kind_bytes"].get(kind, 0),
+                cb["per_kind_bytes"].get(kind, 0)))
+        out["collective"] = {
+            "total_bytes": sum(per_kind.values()),
+            "per_kind_bytes": per_kind,
+            "per_kind_count": cb.get("per_kind_count", {}),
+        }
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_name: str,
+             zero_stage: int = 3, strategy_kw=None, cfg_kw=None,
+             probe: bool = True) -> dict:
+    import dataclasses
+    cfg0 = get_config(arch)
+    status = cell_status(cfg0, shape)
+    out = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": status, "zero_stage": zero_stage,
+           "strategy": dict(strategy_kw or {}), "cfg_kw": dict(cfg_kw or {})}
+    if status != "ok":
+        return out
+    cfg = dryrun_config(cfg0)
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = mesh.devices.size
+    strat = strategy_for(mesh, zero_stage=zero_stage,
+                         **(strategy_kw or {}))
+    t0 = time.time()
+    lowered = lower_cell(cfg, mesh, strat, shape)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    out.update({"lower_s": round(t1 - t0, 2),
+                "compile_s": round(t2 - t1, 2), "chips": chips})
+
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+        args_b = out["memory"].get("argument_size_in_bytes", 0)
+        temp_b = out["memory"].get("temp_size_in_bytes", 0)
+        out["memory"]["per_device_total_gb"] = round(
+            (args_b + temp_b) / 2**30, 3)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["flops_rolled"] = float(ca.get("flops", 0.0))
+        out["bytes_rolled"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = str(e)
+
+    try:
+        hlo = compiled.as_text()
+        out["collective_rolled"] = hlo_stats.collective_bytes(hlo)
+        out["hlo_ops"] = hlo_stats.hlo_op_histogram(hlo)
+        out["hlo_lines"] = hlo.count("\n")
+    except Exception as e:  # pragma: no cover
+        out["hlo_error"] = str(e)
+
+    # trip-count-corrected metrics from unrolled probe compiles
+    if probe:
+        t3 = time.time()
+        try:
+            pm = probe_metrics(cfg, mesh, strat, shape)
+            out.update(pm)
+            out["probe_s"] = round(time.time() - t3, 2)
+        except Exception as e:  # pragma: no cover
+            out["probe_error"] = f"{type(e).__name__}: {e}"
+    if "flops" not in out:
+        out["flops"] = out.get("flops_rolled", 0.0)
+        out["bytes_accessed"] = out.get("bytes_rolled", 0.0)
+        out["collective"] = out.get("collective_rolled", {})
+
+    out["roofline"] = roofline_terms(out, chips)
+
+    # model-flops ratio (6*N*D for dense, 6*N_active*D for MoE)
+    if shape == "train_4k":
+        n = (cfg.active_param_count() if cfg.moe
+             else cfg.param_count())
+        tokens = SHAPES[shape]["batch"] * SHAPES[shape]["seq"]
+        model_flops = 6.0 * n * tokens / chips  # per device
+        out["model_flops_per_device"] = model_flops
+        if out.get("flops"):
+            out["useful_flops_ratio"] = round(
+                model_flops / out["flops"], 3)
+    return out
+
+
+def save(result: dict) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    key = f"{result['arch']}__{result['shape']}__{result['mesh']}"
+    if result.get("tag"):
+        key += f"__{result['tag']}"
+    path = RESULTS_DIR / f"{key}.json"
+    path.write_text(json.dumps(result, indent=1, default=str))
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--zero", type=int, default=3)
+    ap.add_argument("--attn-mode", default="cp", choices=["cp", "tp"])
+    ap.add_argument("--seq-axis", default="model",
+                    choices=["model", "none"])
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--loss-chunk", type=int, default=2048)
+    ap.add_argument("--ssm-chunk", type=int, default=128)
+    ap.add_argument("--moe", default="grouped", choices=["grouped", "a2a"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                for mesh in ("pod1", "pod2"):
+                    cells.append((arch, shape, mesh))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    failures = 0
+    for (arch, shape, mesh) in cells:
+        key = f"{arch}__{shape}__{mesh}"
+        path = RESULTS_DIR / (key + (f"__{args.tag}" if args.tag else "")
+                              + ".json")
+        if path.exists() and not args.force:
+            print(f"[cached] {key}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            strategy_kw = {"attn_mode": args.attn_mode,
+                           "moe_impl": args.moe,
+                           "seq_axis": (None if args.seq_axis == "none"
+                                        else args.seq_axis)}
+            cfg_kw = {"remat": args.remat, "loss_chunk": args.loss_chunk,
+                      "ssm_chunk": args.ssm_chunk}
+            res = run_cell(arch, shape, mesh, zero_stage=args.zero,
+                           strategy_kw=strategy_kw, cfg_kw=cfg_kw,
+                           probe=not args.no_probe)
+            if args.tag:
+                res["tag"] = args.tag
+            p = save(res)
+            rf = res.get("roofline", {})
+            print(f"  status={res['status']} compile={res.get('compile_s')}s"
+                  f" mem/dev={res.get('memory', {}).get('per_device_total_gb')}GB"
+                  f" dominant={rf.get('dominant')}  -> {p.name}", flush=True)
+            if res.get("memory"):
+                print(f"  memory_analysis: {res['memory']}")
+            if res.get("flops") is not None:
+                print(f"  cost_analysis: flops={res.get('flops'):.3e} "
+                      f"bytes={res.get('bytes_accessed'):.3e}")
+        except Exception as e:
+            failures += 1
+            print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Collective-traffic extraction from compiled (post-SPMD-partitioning)
+HLO text.  cost_analysis() gives FLOPs and bytes accessed but not
+collective bytes, so the roofline's third term comes from the collective
+ops in the per-device module (task spec: ROOFLINE ANALYSIS).
+
+Optimized HLO prints operands untyped, so per-op bytes come from the
+LHS output type, adjusted per kind to operand ('payload') bytes:
+  all-gather      operand = output / group   (output is the gathered buf)
+  reduce-scatter  operand = output * group
+  all-reduce / all-to-all / collective-permute: operand = output
+
+NOTE: ops inside while loops appear once in the text; the dry-run
+corrects trip counts via unrolled probe compiles (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\(")
+SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|"
+                      r"s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind over the per-device module.
+    '-done' ops are skipped ('-start' carries the shape)."""
+    per_kind: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = OP_RE.search(line)
+        if m is None or "-done" in line.split("=")[0]:
+            continue
+        out_types, kind = m.group(1), m.group(2)
+        out_bytes = sum(_shape_bytes(d, dims)
+                        for d, dims in SHAPE_RE.findall(out_types))
+        if out_bytes == 0:
+            continue
+        g = GROUPS_RE.search(line)
+        group = int(g.group(2)) if g else 1
+        if kind == "all-gather":
+            nbytes = out_bytes // max(group, 1)
+        elif kind == "reduce-scatter":
+            nbytes = out_bytes * max(group, 1)
+        else:
+            nbytes = out_bytes
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total,
+            "per_kind_bytes": dict(per_kind),
+            "per_kind_count": dict(counts)}
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 12) -> list[tuple[str, int]]:
+    ops: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s+\S+\s+([a-z0-9-]+)\(", hlo_text):
+        ops[m.group(1)] += 1
+    return sorted(ops.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,95 @@
+"""Input shape specs for every (architecture x shape) dry-run cell.
+
+LM transformer shapes (task spec):
+  train_4k     seq 4,096  global_batch 256   -> train_step
+  prefill_32k  seq 32,768 global_batch 32    -> prefill (serve)
+  decode_32k   seq 32,768 global_batch 128   -> decode_step (serve)
+  long_500k    seq 524,288 global_batch 1    -> decode_step, only for
+               sub-quadratic archs (SSM/hybrid); full-attention archs are
+               recorded as skipped(full-attention) per the task rule.
+
+Everything returns ShapeDtypeStructs — no device allocation.  Modality
+frontends are stubs: whisper gets precomputed frame embeddings, qwen2-vl
+gets token embeddings + 3-stream M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ArchConfig, init, init_cache
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+def cell_status(cfg: ArchConfig, shape_name: str) -> str:
+    """'ok' or the skip reason for this (arch, shape) cell."""
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return "skipped(full-attention)"
+    return "ok"
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Graph inputs for the cell (the data-pipeline contract)."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] == "train":
+        batch = {"tokens": sds((b, s), "int32"),
+                 "labels": sds((b, s), "int32")}
+        if cfg.n_enc_layers:
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        if cfg.mrope:
+            batch["mrope_positions"] = sds((3, b, s), "int32")
+        return batch
+    if info["kind"] == "prefill":
+        batch = {"tokens": sds((b, s), "int32")}
+        if cfg.n_enc_layers:
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        if cfg.mrope:
+            batch["mrope_positions"] = sds((3, b, s), "int32")
+        return batch
+    # decode: one new token against a seq-long cache
+    return {"token": sds((b, 1), "int32")}
+
+
+def state_specs(cfg: ArchConfig) -> dict:
+    """Training state avals (params + AdamW moments) with no allocation."""
+    from ..optim import adamw_init
+    params = jax.eval_shape(partial(init, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt = jax.eval_shape(adamw_init, params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def params_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(partial(init, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str) -> Any:
+    info = SHAPES[shape_name]
+    return jax.eval_shape(partial(init_cache, cfg, info["batch"],
+                                  info["seq"]))
+
+
+def dryrun_config(cfg: ArchConfig) -> ArchConfig:
+    """Full config adjusted for the production run: bf16, remat, chunked
+    cross-entropy."""
+    return dataclasses.replace(cfg, dtype="bfloat16", remat="full",
+                               loss_chunk=2048)

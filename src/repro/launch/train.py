@@ -1,0 +1,104 @@
+"""End-to-end training driver (deliverable b): trains a reduced (or
+~100M-parameter) model for a few hundred steps on whatever devices are
+available, with the full substrate — data pipeline, AdamW + schedule,
+checkpoint/restart via the FT supervisor.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 200 --d-model 256 --layers 4
+
+A mid-run injected failure (--fail-at) demonstrates checkpoint-restart;
+the run resumes from the last checkpoint with the exact data stream.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticTokenSource, TokenLoader
+from repro.ft import FailureInjector, Supervisor
+from repro.models import init, train_loss
+from repro.optim import adamw_init, adamw_update, cosine_schedule, \
+    wsd_schedule
+
+
+def build_step(cfg, lr_fn):
+    @jax.jit
+    def step(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch))(state["params"])
+        lr = lr_fn(state["opt"]["step"])
+        params, opt, gnorm = adamw_update(state["params"], grads,
+                                          state["opt"], lr)
+        return ({"params": params, "opt": opt,
+                 "step": state["step"] + 1},
+                {"loss": loss, "gnorm": gnorm, "lr": lr})
+    return step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    base = get_config(args.arch)
+    cfg = base.reduced(n_layers=args.layers, d_model=args.d_model,
+                       d_ff=args.d_model * 4, vocab=args.vocab,
+                       n_heads=max(4, args.d_model // 64))
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} ({cfg.family}) reduced to "
+          f"{n_params/1e6:.1f}M params, {args.steps} steps "
+          f"batch={args.batch} seq={args.seq}")
+
+    params = init(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    lr_fn = (wsd_schedule(args.lr, args.steps)
+             if "minicpm" in args.arch else
+             cosine_schedule(args.lr, args.steps))
+    step_fn = build_step(cfg, lr_fn)
+
+    loader = TokenLoader(SyntheticTokenSource(cfg.vocab, seed=17),
+                         batch=args.batch, seq=args.seq)
+    ckpt = CheckpointManager(pathlib.Path(args.ckpt_dir) / cfg.name,
+                             keep=2)
+    sup = Supervisor(ckpt, loader, checkpoint_every=args.ckpt_every,
+                     injector=FailureInjector(tuple(args.fail_at)))
+
+    if args.resume and ckpt.latest_step() is not None:
+        state, extra = ckpt.restore(state)
+        loader.load_state_dict(extra["data"])
+        print(f"resumed from step {extra['step']}")
+
+    t0 = time.time()
+    state = sup.run(state, step_fn, args.steps)
+    wall = time.time() - t0
+    losses = [h["loss"] for h in sup.history]
+    print(f"done: {len(sup.history)} steps in {wall:.1f}s "
+          f"({args.batch*args.seq*len(sup.history)/wall:.0f} tok/s) — "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"restarts={sup.restarts}, stragglers={len(sup.watchdog.events)}")
+    assert losses[-1] < losses[0], "loss did not decrease"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

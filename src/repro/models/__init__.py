@@ -1,0 +1,6 @@
+"""Unified JAX model zoo for the assigned architectures."""
+from .model import ArchConfig, MoECfg, SSMCfg, decode_step, init, \
+    init_cache, params_count, prefill, train_loss
+
+__all__ = ["ArchConfig", "MoECfg", "SSMCfg", "decode_step", "init",
+           "init_cache", "params_count", "prefill", "train_loss"]

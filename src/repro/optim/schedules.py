@@ -1,0 +1,36 @@
+"""LR schedules.  WSD (warmup-stable-decay) is MiniCPM's schedule
+(arXiv:2404.06395); cosine is the default elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, total_steps: int,
+                 warmup_frac: float = 0.01, decay_frac: float = 0.1,
+                 floor: float = 0.1):
+    warm = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak_lr * step / warm
+        decay_t = (step - decay_start) / max(1, total_steps - decay_start)
+        decay_lr = peak_lr * jnp.exp(jnp.log(floor) *
+                                     jnp.clip(decay_t, 0.0, 1.0))
+        return jnp.where(step < warm, warm_lr,
+                         jnp.where(step < decay_start, peak_lr, decay_lr))
+    return lr
+
+
+def cosine_schedule(peak_lr: float, total_steps: int,
+                    warmup_frac: float = 0.01, floor_frac: float = 0.1):
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak_lr * step / warm
+        t = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warm, warm_lr, peak_lr * cos)
+    return lr

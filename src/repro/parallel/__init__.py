@@ -1,0 +1,6 @@
+"""SPMD lowering of Piper strategies: shardings, ZeRO, EP, pipeline."""
+from .sharding import (Strategy, batch_shardings, cache_shardings,
+                       opt_state_shardings, params_shardings)
+
+__all__ = ["Strategy", "batch_shardings", "cache_shardings",
+           "opt_state_shardings", "params_shardings"]

@@ -1,0 +1,225 @@
+"""SPMD sharding rules for the production mesh (DESIGN.md §5).
+
+Maps every parameter / activation / cache tensor to a NamedSharding over
+the required meshes:
+  single-pod (16, 16)  axes ("data", "model")
+  multi-pod  (2,16,16) axes ("pod", "data", "model")
+
+Strategy (the Piper high-level plan lowered to pjit):
+  - batch over ("pod","data") — DP;
+  - tensor parallelism over "model": attention heads / FFN columns /
+    expert dimension (EP) / vocab;
+  - ZeRO over "data": stage 1/2 shard optimizer state, stage 3 also
+    shards parameters (FSDP-style) — XLA inserts the all-gathers /
+    reduce-scatters the Piper IR makes explicit in the interpreter path;
+  - decode caches shard the sequence dim over "model" (works for every
+    kv-head count incl. MQA) and batch over "data".
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """High-level parallelism strategy for the SPMD lowering."""
+    dp_axes: tuple = ("data",)       # + ("pod",) on the multi-pod mesh
+    tp_axis: str = "model"
+    zero_stage: int = 3              # 1 | 2 | 3
+    shard_activations: bool = True
+    # sequence/context parallelism: layer-boundary activations and
+    # attention q shard their seq dim over this axis (Megatron-SP +
+    # context-parallel attention) — the main activation-memory lever
+    seq_axis: Optional[str] = "model"
+    # attention sharding: "cp" = q over seq (works for any head count),
+    # "tp" = heads over the model axis (needs head counts divisible by
+    # the axis; avoids the CP dk/dv reductions)
+    attn_mode: str = "cp"
+    # MoE dispatch: "grouped" (pjit-auto) | "a2a" (shard_map all-to-all)
+    moe_impl: str = "grouped"
+    remat: str = "full"
+
+    def batch_spec(self) -> P:
+        ax = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        return P(ax)
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return "data" if self.zero_stage >= 3 else None
+
+
+def _dim_ok(shape, dim, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return shape[dim] % size == 0
+
+
+def _spec(mesh, shape, *axes):
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    out = []
+    for dim, ax in enumerate(axes):
+        if ax is not None and _dim_ok(shape, dim, mesh, ax):
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# param-name classification -------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj", "lm_head"}
+_ROW = {"wo", "w_down", "out_proj"}
+_EXPERT = {"we_up", "we_down", "we_gate"}
+# SSM projections: d_inner is tp-sharded by in_proj, so everything that
+# CONSUMES d_inner (bc_proj/x_proj/dt_proj2: (d_inner, small)) is
+# row-parallel, and dt_proj ((dt_rank, d_inner)) is column-parallel.
+# (Getting these backwards costs a full-activation gather per layer —
+# 233 GB/step of all-reduce on zamba2; see EXPERIMENTS.md §Perf.)
+_SSM_COL = {"dt_proj"}
+_SSM_ROW = {"bc_proj", "x_proj", "dt_proj2"}
+
+
+def param_spec(path: tuple, shape: tuple, mesh: Mesh,
+               strat: Strategy) -> P:
+    """Sharding rule for one parameter.  ``path`` is the flattened dict
+    path, e.g. ("layers", "attn", "wq"); stacked layer params carry a
+    leading n_layers axis which stays unsharded."""
+    name = path[-1]
+    tp = strat.tp_axis
+    fsdp = strat.fsdp_axis
+    stacked = path[0] in ("layers", "enc_layers", "cross_layers") \
+        and len(shape) >= 2
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return _spec(mesh, shape, *(lead + axes))
+
+    if name in ("embed",):
+        return _spec(mesh, shape, tp, fsdp)         # vocab x d_model
+    if name == "lm_head":
+        return _spec(mesh, shape, fsdp, tp)         # d_model x vocab
+    if name in _EXPERT:
+        # (E, d_in, d_out): experts over tp; the ZeRO shard goes on the
+        # OUTPUT dim — sharding d_in would put the einsum contraction on
+        # a sharded dim and psum ~GB activation outputs per layer, while
+        # gathering f-sharded weights costs ~25 MB (EXPERIMENTS §Perf D3)
+        return spec(tp, None, fsdp)
+    if name == "router":
+        return spec(None, None)
+    if name in _COL or name in _SSM_COL:
+        if len(body) == 1:                          # bias
+            return spec(tp)
+        return spec(fsdp, tp)
+    if name in _ROW or name in _SSM_ROW:
+        if len(body) == 1:
+            return spec(None)
+        return spec(tp, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return spec(tp)
+    if name in ("conv_w",):                         # (K, d_inner)
+        return spec(None, tp)
+    if name in ("conv_b", "dt_bias", "D"):
+        return spec(tp) if len(body) == 1 else spec(None)
+    if name == "A_log":
+        if len(body) == 2:                          # (d_inner, state)
+            return spec(tp, None)
+        return spec(tp)
+    # norms and anything else: replicated
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(params_avals, mesh: Mesh, strat: Strategy):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_avals)
+    out = []
+    for kpath, leaf in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", None))
+                     for k in kpath)
+        spec = param_spec(path, leaf.shape, mesh, strat)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(params_avals, mesh: Mesh, strat: Strategy):
+    """AdamW m/v: ZeRO>=1 shards over 'data' on the largest divisible
+    dim (in addition to the param's own sharding)."""
+    p_sh = params_shardings(params_avals, mesh, strat)
+
+    def widen(leaf_aval, sh):
+        spec = list(sh.spec) + [None] * (len(leaf_aval.shape)
+                                         - len(sh.spec))
+        if strat.zero_stage >= 1:
+            used = {a for s in spec if s
+                    for a in (s if isinstance(s, tuple) else (s,))}
+            if "data" not in used:
+                # shard the largest unsharded divisible dim over data
+                cand = sorted(range(len(spec)),
+                              key=lambda d: -leaf_aval.shape[d])
+                for d in cand:
+                    if spec[d] is None and _dim_ok(leaf_aval.shape, d,
+                                                   mesh, "data"):
+                        spec[d] = "data"
+                        break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(widen, params_avals, p_sh)
+
+
+def batch_shardings(batch_avals, mesh: Mesh, strat: Strategy):
+    def one(aval):
+        if not aval.shape:
+            return NamedSharding(mesh, P())
+        ax = strat.dp_axes if len(strat.dp_axes) > 1 else strat.dp_axes[0]
+        if not _dim_ok(aval.shape, 0, mesh, ax):
+            return NamedSharding(mesh, P())
+        rest = [None] * (len(aval.shape) - 1)
+        # mrope positions: (3, B, S) — batch is dim 1
+        if len(aval.shape) == 3 and aval.shape[0] == 3 and \
+                _dim_ok(aval.shape, 1, mesh, ax):
+            return NamedSharding(mesh, P(None, ax, None))
+        return NamedSharding(mesh, P(ax, *rest))
+    return jax.tree_util.tree_map(one, batch_avals)
+
+
+def cache_shardings(cache_avals, mesh: Mesh, strat: Strategy):
+    """Decode caches: batch over dp axes, long dims over the tp axis.
+    k/v: (L, B, Hkv, S, D) -> seq over tp; ssm: (L, B, …, N) -> d_inner
+    (or heads) over tp; conv: (L, B, K-1, di) -> di over tp."""
+    dp = strat.dp_axes if len(strat.dp_axes) > 1 else strat.dp_axes[0]
+    tp = strat.tp_axis
+
+    def one_path(kpath, aval):
+        name = getattr(kpath[-1], "key", "")
+        shape = aval.shape
+        if name == "len" or not shape:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return NamedSharding(mesh, _spec(
+                mesh, shape, None, dp, None, tp, None))
+        if name == "ssm":
+            if len(shape) == 4:   # (L, B, d_inner, N)
+                return NamedSharding(mesh, _spec(
+                    mesh, shape, None, dp, tp, None))
+            return NamedSharding(mesh, _spec(  # (L, B, H, P, N)
+                mesh, shape, None, dp, tp, None, None))
+        if name == "conv":
+            return NamedSharding(mesh, _spec(
+                mesh, shape, None, dp, None, tp))
+        if name == "enc_out":
+            return NamedSharding(mesh, _spec(
+                mesh, shape, dp, None, None))
+        specs = [None] * len(shape)
+        return NamedSharding(mesh, P(*specs))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_avals)
+    out = [one_path(kp, leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

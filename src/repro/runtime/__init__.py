@@ -1,0 +1,6 @@
+"""Piper strategy-agnostic runtime: interpreter + timeline simulator."""
+from .interpreter import Interpreter, RunResult
+from .memory import DeviceLedger, bucket_persistent_bytes
+
+__all__ = ["Interpreter", "RunResult", "DeviceLedger",
+           "bucket_persistent_bytes"]

@@ -1,0 +1,515 @@
+"""Strategy-agnostic multi-device interpreter (paper §4.3.2 worker loop).
+
+Executes a compiled ``GlobalPlan`` on simulated devices with real numerics:
+each device owns per-stream in-order task queues; a task dispatches when its
+dependencies are done AND it is at the head of its stream; collectives
+rendezvous across all member devices' stream heads.  If no task can make
+progress the interpreter raises — this is the dynamic analogue of the
+scheduler's communication-order validation (a mismatched dispatch order on
+a shared communicator would hang a real cluster).
+
+Numerics conventions (DESIGN.md §2):
+  - DP / EP chunks process per-device input shards; gradient all-reduce
+    averages over the replica group; microbatch accumulation averages over
+    microbatches (loss = global-batch mean).
+  - ZeRO all-gathers/reduce-scatters are numerically transparent (sharding
+    is a *placement* of identical math) but fully accounted in the memory
+    ledger: temporary full-param and full-grad buffers live exactly from
+    materialization to last consumer, as in the paper's buffer management.
+
+This component is how we validate the paper's safety guarantee on CPU:
+any directive-transformed DAG must produce the same loss/grads as the
+untransformed single-device execution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compiler import CompiledProgram
+from ..core.dag import Node, TrainingDAG
+from ..core.plan import (ROLE_COLL, ROLE_COMPUTE, ROLE_RECV, ROLE_SEND,
+                         GlobalPlan, Task, TaskKey)
+from .memory import (GRAD_BYTES_PER_ELEM, WEIGHT_BYTES_PER_ELEM,
+                     DeviceLedger, bucket_persistent_bytes)
+
+
+@dataclass
+class RunResult:
+    loss: float
+    grads: dict[str, Any]
+    ledgers: dict[int, DeviceLedger]
+    exec_order: list[TaskKey]
+    stats: dict[str, Any] = field(default_factory=dict)
+
+    def peak_bytes(self) -> dict[int, int]:
+        return {d: l.peak for d, l in self.ledgers.items()}
+
+    def max_peak(self) -> int:
+        return max(l.peak for l in self.ledgers.values())
+
+
+def tree_nbytes_actual(tree) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree) if l is not None)
+
+
+class Interpreter:
+    def __init__(self, prog: CompiledProgram,
+                 params: Optional[dict[str, Any]] = None,
+                 track_memory: bool = True,
+                 gather_limit: int = 2) -> None:
+        """``gather_limit``: max in-flight ZeRO-3 full-param buffers per
+        device (FSDP-style rate limiter — without it every all-gather
+        would dispatch at t=0 and defeat parameter sharding)."""
+        self.prog = prog
+        self.dag: TrainingDAG = prog.dag
+        self.plan: GlobalPlan = prog.plan
+        self.params = params if params is not None else prog.params
+        self.track_memory = track_memory
+        self.gather_limit = gather_limit
+        # per-node jitted exec functions (paper: Chunk.exec dispatch) —
+        # retracing eagerly per call would dominate dispatch overhead
+        self._jit_cache: dict[int, Any] = {}
+
+    # ------------------------------------------------------------------ run
+    def run(self, batch: dict[str, Any]) -> RunResult:
+        dag, plan = self.dag, self.plan
+        devices = plan.devices
+        ledgers = {d: DeviceLedger(device=d) for d in devices}
+
+        # ---- persistent model state ---------------------------------------
+        for bname, bucket in dag.buckets.items():
+            homes = self._bucket_devices(bname)
+            for d in homes:
+                ledgers[d].alloc_persistent(
+                    bucket_persistent_bytes(bucket, d))
+
+        # ---- input distribution -------------------------------------------
+        # store: (node, slot, device) -> value
+        store: dict[tuple[int, int, int], Any] = {}
+        feeds = self._resolve_inputs(batch)
+        # graph inputs are charged from first use to last consumer
+        self._feed_name: dict[tuple[int, int], str] = {}
+        self._feed_left: dict[tuple[str, int], int] = {}
+        for name, (spec, consumers) in self.dag.inputs.items():
+            for (nid, slot) in consumers:
+                self._feed_name[(nid, slot)] = name
+                for d in self.dag.nodes[nid].devices:
+                    k = (name, d)
+                    self._feed_left[k] = self._feed_left.get(k, 0) + 1
+
+        # grads accumulate per (bucket, device)
+        grad_acc: dict[tuple[str, int], Any] = {}
+        grad_cnt: dict[tuple[str, int], int] = {}
+        reduced: dict[str, Any] = {}
+        reduced_cnt: dict[str, int] = {}
+        losses: list[Any] = []
+
+        # consumer counts for transient frees
+        cons = self._consumer_counts()
+
+        # ZeRO-3 gather lifetimes: gather node -> consumer chunks
+        gather_consumers: dict[int, set[int]] = {}
+        for n in dag.nodes.values():
+            g = n.meta.get("param_from_comm")
+            if g is not None:
+                gather_consumers.setdefault(g, set()).add(n.id)
+        gather_left = {g: {(c, d) for c in cs
+                           for d in dag.nodes[c].devices}
+                       for g, cs in gather_consumers.items()}
+
+        # ---- scheduling state ----------------------------------------------
+        done: set[TaskKey] = set()
+        heads: dict[tuple[int, str], int] = {}
+        exec_order: list[TaskKey] = []
+        queues = {(d, s): list(keys)
+                  for d, p in plan.device_plans.items()
+                  for s, keys in p.streams.items()}
+
+        def head_task(d, s) -> Optional[Task]:
+            q = queues[(d, s)]
+            i = heads.get((d, s), 0)
+            return None if i >= len(q) else plan.device_plans[d].tasks[q[i]]
+
+        def deps_met(t: Task) -> bool:
+            return all(k in done for k in t.deps)
+
+        def at_head(key: TaskKey) -> bool:
+            nid, d, role = key
+            t = plan.device_plans[d].tasks[key]
+            q = queues[(d, t.stream)]
+            i = heads.get((d, t.stream), 0)
+            return i < len(q) and q[i] == key
+
+        def advance(t: Task) -> None:
+            heads[(t.device, t.stream)] = heads.get(
+                (t.device, t.stream), 0) + 1
+            done.add(t.key)
+            exec_order.append(t.key)
+
+        total = sum(p.n_tasks() for p in plan.device_plans.values())
+        progress = True
+        while len(done) < total:
+            if not progress:
+                pending = [(d, s, queues[(d, s)][heads.get((d, s), 0)])
+                           for (d, s) in queues
+                           if heads.get((d, s), 0) < len(queues[(d, s)])]
+                raise RuntimeError(
+                    "interpreter deadlock — stream heads blocked at: "
+                    + "; ".join(f"dev{d}/{s}:{k}" for d, s, k in pending[:8]))
+            progress = False
+            # comm streams dispatch eagerly (before the default compute
+            # stream) — reductions free memory as soon as possible, like
+            # the paper's background-thread buffer release.
+            sweep = sorted(queues, key=lambda ds: (ds[0],
+                                                   ds[1] == "main", ds[1]))
+            for (d, s) in sweep:
+                t = head_task(d, s)
+                if t is None or not deps_met(t):
+                    continue
+                node = dag.nodes[t.node]
+                if t.role == ROLE_COLL:
+                    group_tasks = [t] + [
+                        plan.device_plans[pd].tasks[pk]
+                        for pk in t.peers for pd in [pk[1]]]
+                    if not all(deps_met(g) and at_head(g.key)
+                               for g in group_tasks):
+                        continue
+                    if (node.op == "all_gather" and node.payload == "param"
+                            and self.track_memory):
+                        inflight = max(
+                            sum(1 for k in ledgers[g.device].live
+                                if k[0] == "fullparam")
+                            for g in group_tasks)
+                        if inflight >= self.gather_limit:
+                            continue  # FSDP-style gather rate limiter
+                    self._exec_collective(
+                        node, group_tasks, store, grad_acc, grad_cnt,
+                        reduced, reduced_cnt, ledgers, cons, gather_left)
+                    for g in group_tasks:
+                        advance(g)
+                elif t.role == ROLE_SEND:
+                    self._exec_send(node, t, store, feeds, cons, ledgers)
+                    advance(t)
+                elif t.role == ROLE_RECV:
+                    self._exec_recv(node, t, store, cons, ledgers)
+                    advance(t)
+                else:
+                    self._exec_chunk(
+                        node, t, store, feeds, cons, grad_acc, grad_cnt,
+                        losses, ledgers, gather_left, gather_consumers)
+                    advance(t)
+                progress = True
+
+        # ---- results ---------------------------------------------------------
+        loss = float(jnp.mean(jnp.stack([jnp.asarray(l) for l in losses])))
+        grads = self._final_grads(grad_acc, grad_cnt, reduced, reduced_cnt)
+        return RunResult(loss=loss, grads=grads, ledgers=ledgers,
+                         exec_order=exec_order,
+                         stats={"tasks": total, "losses": len(losses)})
+
+    # ------------------------------------------------------------ internals
+    def _bucket_devices(self, bname: str) -> tuple[int, ...]:
+        devs: set[int] = set()
+        for n in self.dag.nodes.values():
+            if n.is_chunk and n.bucket == bname:
+                devs.update(n.devices)
+        return tuple(sorted(devs)) or (0,)
+
+    def _consumer_counts(self) -> dict[tuple[int, int, int], int]:
+        cons: dict[tuple[int, int, int], int] = {}
+        for e in self.dag.edges:
+            dst = self.dag.nodes[e.dst]
+            for t_dev in self._value_devices(e.dst):
+                cons[(e.src, e.src_out, t_dev)] = cons.get(
+                    (e.src, e.src_out, t_dev), 0) + 1
+        return cons
+
+    def _value_devices(self, nid: int) -> tuple[int, ...]:
+        n = self.dag.nodes[nid]
+        if n.is_comm and n.op == "p2p":
+            return tuple(s for (s, _) in n.meta["pairs"])
+        return n.devices
+
+    def _resolve_inputs(self, batch) -> dict[tuple[str, int, int], Any]:
+        """Map (input_name, consumer_node, consumer_slot) unsplit; values
+        are sliced per consuming device (DP/EP split along axis 0) and per
+        microbatch (Split renamed inputs to name@MBi)."""
+        feeds: dict[tuple[int, int, int], Any] = {}
+        mb_meta = self.dag.meta.get("microbatch_inputs", {})
+        # build values per (possibly microbatched) input name
+        values: dict[str, Any] = {}
+        for name, (spec, consumers) in self.dag.inputs.items():
+            if name in batch:
+                values[name] = batch[name]
+        for base, info in mb_meta.items():
+            if base not in batch:
+                raise KeyError(f"missing batch input {base!r}")
+            arr = batch[base]
+            k = info["k"]
+            if arr.shape[0] % k:
+                raise ValueError(f"batch dim {arr.shape[0]} not divisible "
+                                 f"by {k} microbatches")
+            parts = jnp.split(arr, k, axis=0)
+            for i, sub in enumerate(info["names"]):
+                values[sub] = parts[i]
+        for name, (spec, consumers) in self.dag.inputs.items():
+            if name not in values:
+                raise KeyError(f"missing batch input {name!r}")
+            arr = values[name]
+            for (nid, slot) in consumers:
+                node = self.dag.nodes[nid]
+                devs = node.devices
+                if len(devs) > 1 and node.meta.get("placement_mode") in (
+                        "replicate", "shard_expert"):
+                    if arr.shape[0] % len(devs):
+                        raise ValueError(
+                            f"cannot shard input {name!r} batch "
+                            f"{arr.shape[0]} over {len(devs)} devices")
+                    shards = jnp.split(arr, len(devs), axis=0)
+                    for d, sh in zip(devs, shards):
+                        feeds[(nid, slot, d)] = sh
+                else:
+                    for d in devs:
+                        feeds[(nid, slot, d)] = arr
+        return feeds
+
+    # -- execution of node kinds ---------------------------------------------
+    def _gather_chunk_inputs(self, node: Node, t: Task, store, feeds):
+        m = node.meta.get("n_inputs", 0)
+        args = []
+        for slot in range(m):
+            key = (node.id, slot, t.device)
+            if key in feeds:
+                args.append(feeds[key])
+                continue
+            vals = [store[(e.src, e.src_out, t.device)]
+                    for e in self.dag.in_edges(node.id)
+                    if e.dst_in == slot]
+            if not vals:
+                if slot in node.meta.get("zero_cot_slots", []):
+                    args.append(None)
+                    continue
+                if slot in node.meta.get("seed_slots", []):
+                    args.append(None)
+                    continue
+                raise KeyError(
+                    f"no value for {node.short()} slot {slot} dev {t.device}")
+            args.append(vals[0] if len(vals) == 1 else sum(vals[1:], vals[0]))
+        # seed/zero cotangents (bwd input slot m+j carries the cotangent of
+        # forward output j, where m = n_inputs - fwd.n_outputs)
+        if "fwd_node" in node.meta:
+            fwd = self.dag.nodes[node.meta["fwd_node"]]
+            m0 = node.meta["n_inputs"] - fwd.n_outputs
+            for slot in node.meta.get("seed_slots", []):
+                s = fwd.out_specs[slot - m0]
+                args[slot] = jnp.ones(s.shape, dtype=s.dtype)
+            for slot in node.meta.get("zero_cot_slots", []):
+                s = fwd.out_specs[slot - m0]
+                args[slot] = jnp.zeros(s.shape, dtype=s.dtype)
+        return args
+
+    def _exec_chunk(self, node, t, store, feeds, cons, grad_acc, grad_cnt,
+                    losses, ledgers, gather_left, gather_consumers) -> None:
+        args = self._gather_chunk_inputs(node, t, store, feeds)
+        if node.id not in self._jit_cache:
+            self._jit_cache[node.id] = jax.jit(node.fn)
+        # charge graph inputs (first use) / release (last consumer)
+        if self.track_memory:
+            led = ledgers[t.device]
+            for slot in range(node.meta.get("n_inputs", 0)):
+                fkey = (node.id, slot)
+                if fkey not in self._feed_name:
+                    continue
+                name = self._feed_name[fkey]
+                v = feeds.get((node.id, slot, t.device))
+                if v is not None:
+                    led.alloc(("input", name, t.device),
+                              v.size * v.dtype.itemsize)
+                k = (name, t.device)
+                self._feed_left[k] -= 1
+                if self._feed_left[k] <= 0:
+                    led.free(("input", name, t.device))
+        bucket_params = self.params.get(node.bucket) if node.bucket else None
+        # EP shard: numerically each device processes its token shard with
+        # the full expert stack (identical math to a2a-dispatched experts).
+        outs = self._jit_cache[node.id](bucket_params, *args)
+        is_bwd = node.meta.get("is_backward", False)
+        led = ledgers[t.device]
+
+        if is_bwd:
+            bucket_grads = outs[0]
+            cots = outs[1:]
+            if node.bucket is not None and bucket_grads is not None:
+                b = self.dag.bucket_of(node.bucket)
+                if self.track_memory and b.shard_grads:
+                    # ZeRO-2: one temporary full-grad buffer per bucket,
+                    # reused across backward chunks, freed at reduce-scatter
+                    led.alloc(("fullgrad", node.bucket, t.device),
+                              b.param_elems * GRAD_BYTES_PER_ELEM)
+                k = (node.bucket, t.device)
+                scaled = bucket_grads
+                grad_acc[k] = (scaled if k not in grad_acc else
+                               jax.tree_util.tree_map(
+                                   jnp.add, grad_acc[k], scaled))
+                grad_cnt[k] = grad_cnt.get(k, 0) + 1
+            out_vals = cots
+            out_slots = list(range(1, 1 + len(cots)))
+        else:
+            out_vals = outs
+            out_slots = list(range(len(outs)))
+
+        discard = set(node.meta.get("discard_out_slots", []))
+        for slot, val in zip(out_slots, out_vals):
+            if slot in discard:
+                continue
+            key = (node.id, slot, t.device)
+            if cons.get(key):
+                store[key] = val
+                if self.track_memory:
+                    led.alloc(("act",) + key,
+                              val.size * val.dtype.itemsize
+                              if hasattr(val, "size") else 0)
+        # loss outputs
+        for (nid, slot) in self.dag.outputs:
+            if nid == node.id:
+                losses.append(outs[slot])
+
+        self._release_inputs(node, t, store, cons, ledgers)
+        # ZeRO-3 full-param buffer lifetime
+        g = node.meta.get("param_from_comm")
+        if g is not None and g in gather_left:
+            gather_left[g].discard((node.id, t.device))
+            if self.track_memory and not any(
+                    d == t.device for (_, d) in gather_left[g]):
+                ledgers[t.device].free(("fullparam", g, t.device))
+
+    def _release_inputs(self, node, t, store, cons, ledgers) -> None:
+        for e in self.dag.in_edges(node.id):
+            key = (e.src, e.src_out, t.device)
+            if key in cons:
+                cons[key] -= 1
+                if cons[key] <= 0 and key in store:
+                    del store[key]
+                    if self.track_memory:
+                        ledgers[t.device].free(("act",) + key)
+
+    def _exec_send(self, node, t, store, feeds, cons, ledgers) -> None:
+        pass  # value moves at recv time (send marks readiness)
+
+    def _exec_recv(self, node, t, store, cons, ledgers) -> None:
+        e_in = self.dag.in_edges(node.id)
+        assert len(e_in) == 1, f"p2p with {len(e_in)} inputs"
+        e = e_in[0]
+        # find the pair (src_dev -> this device)
+        src_dev = None
+        for (s, d) in node.meta["pairs"]:
+            if d == t.device:
+                src_dev = s
+        val = store[(e.src, e.src_out, src_dev)]
+        key = (node.id, 0, t.device)
+        store[key] = val
+        if self.track_memory and cons.get(key):
+            ledgers[t.device].alloc(("act",) + key,
+                                    val.size * val.dtype.itemsize)
+        # release the producer-side value
+        pkey = (e.src, e.src_out, src_dev)
+        cons[pkey] = cons.get(pkey, 1) - 1
+        if cons[pkey] <= 0 and pkey in store:
+            del store[pkey]
+            ledgers[src_dev].free(("act",) + pkey)
+
+    def _exec_collective(self, node, group_tasks, store, grad_acc, grad_cnt,
+                         reduced, reduced_cnt, ledgers, cons,
+                         gather_left) -> None:
+        op = node.op
+        bucket = node.meta.get("bucket")
+        if op in ("all_reduce", "reduce_scatter") and node.payload == "grad":
+            # bucket_sz partitions a reduction into parts; numerics (and
+            # buffer lifetimes) are handled once, on part 0
+            if node.meta.get("part", 0) != 0:
+                return
+            b = self.dag.bucket_of(bucket)
+            devs = [t.device for t in group_tasks]
+            vals, cnts = [], []
+            for d in devs:
+                k = (bucket, d)
+                if k in grad_acc:
+                    vals.append(grad_acc[k])
+                    cnts.append(grad_cnt[k])
+            if vals:
+                mean = jax.tree_util.tree_map(
+                    lambda *xs: sum(x / c for x, c in zip(xs, cnts))
+                    / len(xs), *vals)
+                # per-microbatch reduction: contributions accumulate
+                key = bucket
+                if key in reduced and not node.meta.get("accumulated"):
+                    reduced[key] = jax.tree_util.tree_map(
+                        jnp.add, reduced[key], mean)
+                    reduced_cnt[key] += 1
+                else:
+                    reduced[key] = mean
+                    reduced_cnt[key] = 1
+                # grads on each device were consumed by the reduction
+                for d in devs:
+                    grad_acc.pop((bucket, d), None)
+                    grad_cnt.pop((bucket, d), None)
+                    if self.track_memory and b.shard_grads:
+                        ledgers[d].free(("fullgrad", bucket, d))
+        elif op == "all_gather" and node.payload == "param":
+            if self.track_memory:
+                b = self.dag.bucket_of(bucket)
+                for t in group_tasks:
+                    ledgers[t.device].alloc(
+                        ("fullparam", node.id, t.device),
+                        b.param_elems * WEIGHT_BYTES_PER_ELEM)
+        elif op == "all_to_all":
+            # EP a2a: numerically transparent (see class docstring);
+            # move each device's value through the comm node.
+            for t in group_tasks:
+                for e in self.dag.in_edges(node.id):
+                    v = store.get((e.src, e.src_out, t.device))
+                    if v is None:
+                        continue
+                    key = (node.id, 0, t.device)
+                    store[key] = v
+                    if self.track_memory and cons.get(key):
+                        ledgers[t.device].alloc(
+                            ("act",) + key, v.size * v.dtype.itemsize)
+            for t in group_tasks:
+                self._release_inputs(node, t, store, cons, ledgers)
+        else:
+            # generic pass-through collective on activations
+            for t in group_tasks:
+                for e in self.dag.in_edges(node.id):
+                    v = store.get((e.src, e.src_out, t.device))
+                    if v is not None:
+                        store[(node.id, 0, t.device)] = v
+            for t in group_tasks:
+                self._release_inputs(node, t, store, cons, ledgers)
+
+    def _final_grads(self, grad_acc, grad_cnt, reduced, reduced_cnt):
+        out: dict[str, Any] = {}
+        for bucket, g in reduced.items():
+            out[bucket] = jax.tree_util.tree_map(
+                lambda x: x / reduced_cnt[bucket], g)
+        # buckets never reduced (single device, no Replicate):
+        per_bucket_dev: dict[str, list] = {}
+        for (bucket, d), g in grad_acc.items():
+            per_bucket_dev.setdefault(bucket, []).append(
+                jax.tree_util.tree_map(
+                    lambda x: x / grad_cnt[(bucket, d)], g))
+        for bucket, gs in per_bucket_dev.items():
+            if bucket in out:
+                continue
+            acc = gs[0]
+            for g in gs[1:]:
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            out[bucket] = jax.tree_util.tree_map(
+                lambda x: x / len(gs), acc)
+        return out

@@ -1,0 +1,68 @@
+"""Per-device memory accounting (paper §4.3.2 'Memory management').
+
+Piper manages flat per-bucket buffers for params/grads, temporary full
+buffers for ZeRO rematerialization, and intermediate activations freed
+after their last consumer.  The interpreter charges every one of those to
+a per-device ledger so peak memory is exact — this is what reproduces the
+paper's PP x ZeRO results (Fig. 8) on CPU.
+
+Mixed-precision convention (Megatron-style, used for accounting):
+  weights bf16 (2 B/elem) · grads fp32 (4 B/elem) ·
+  optimizer m+v+master fp32 (12 B/elem)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+WEIGHT_BYTES_PER_ELEM = 2
+GRAD_BYTES_PER_ELEM = 4
+OPT_BYTES_PER_ELEM = 12
+
+
+@dataclass
+class DeviceLedger:
+    device: int
+    persistent: int = 0
+    current: int = 0
+    peak: int = 0
+    # live transient allocations: key -> bytes
+    live: dict = field(default_factory=dict)
+
+    def alloc_persistent(self, nbytes: int) -> None:
+        self.persistent += nbytes
+        self.current += nbytes
+        self.peak = max(self.peak, self.current)
+
+    def alloc(self, key, nbytes: int) -> None:
+        if key in self.live:
+            return
+        self.live[key] = nbytes
+        self.current += nbytes
+        self.peak = max(self.peak, self.current)
+
+    def free(self, key) -> None:
+        nbytes = self.live.pop(key, 0)
+        self.current -= nbytes
+
+    def snapshot(self) -> dict:
+        return {"device": self.device, "persistent": self.persistent,
+                "current": self.current, "peak": self.peak,
+                "live_buffers": len(self.live)}
+
+
+def bucket_persistent_bytes(bucket, device: int) -> int:
+    """Persistent model-state bytes bucket ``bucket`` pins on ``device``."""
+    elems = bucket.param_elems
+    dp = len(bucket.replica_devices) if bucket.replica_devices else 1
+    ep = len(bucket.expert_devices) if bucket.expert_devices else 1
+    elems = elems // ep  # expert shard
+    w = elems * WEIGHT_BYTES_PER_ELEM
+    if bucket.shard_params:
+        w //= dp
+    g = elems * GRAD_BYTES_PER_ELEM
+    if bucket.shard_grads:
+        g //= dp
+    o = elems * OPT_BYTES_PER_ELEM
+    if bucket.shard_opt and dp > 1:
+        o //= dp
+    return w + g + o

@@ -1,0 +1,85 @@
+"""Shared test helpers: tiny annotated models + oracles."""
+import jax
+import jax.numpy as jnp
+
+D = 16
+
+
+def stage_fn(p, x):
+    h = jnp.tanh(x @ p["w1"])
+    return jnp.tanh(h @ p["w2"])
+
+
+def loss_fn(p, x, y):
+    return jnp.mean((stage_fn(p, x) - y) ** 2)
+
+
+def make_mlp_params(key, n_stage, d=D):
+    ks = jax.random.split(key, 2 * n_stage)
+    return {f"stage{i}": {
+        "w1": jax.random.normal(ks[2 * i], (d, d)) * 0.1,
+        "w2": jax.random.normal(ks[2 * i + 1], (d, d)) * 0.1,
+    } for i in range(n_stage)}
+
+
+def make_mlp_forward(n_stage):
+    """n_stage PP-annotated stages; the last one computes the loss."""
+    def forward(rec, tvs):
+        h = tvs["x"]
+        for i in range(n_stage - 1):
+            with rec.annotate("pp"):
+                h = rec.region(stage_fn, f"stage{i}", name=f"s{i}")(h)
+        with rec.annotate("pp"):
+            loss = rec.region(loss_fn, f"stage{n_stage-1}",
+                              name="head")(h, tvs["y"])
+        return loss
+    return forward
+
+
+def make_moe_forward(n_stage, experts_every=2):
+    """PP stages with an EP-annotated expert region every k-th stage."""
+    def forward(rec, tvs):
+        h = tvs["x"]
+        for i in range(n_stage - 1):
+            with rec.annotate("pp"):
+                h = rec.region(stage_fn, f"stage{i}", name=f"s{i}")(h)
+                if i % experts_every == 1:
+                    with rec.annotate("ep"):
+                        h = rec.region(stage_fn, f"exp{i}",
+                                       name=f"e{i}")(h)
+        with rec.annotate("pp"):
+            loss = rec.region(loss_fn, f"stage{n_stage-1}",
+                              name="head")(h, tvs["y"])
+        return loss
+    return forward
+
+
+def mlp_oracle(params, x, y, n_stage, expert_stages=()):
+    def full(params):
+        h = x
+        for i in range(n_stage - 1):
+            h = stage_fn(params[f"stage{i}"], h)
+            if i in expert_stages:
+                h = stage_fn(params[f"exp{i}"], h)
+        return loss_fn(params[f"stage{n_stage-1}"], h, y)
+    l, g = jax.value_and_grad(full)(params)
+    return float(l), g
+
+
+def make_batch(batch=8, d=D, seed=1):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (batch, d))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, d))
+    return {"x": x, "y": y}
+
+
+def inputs_spec(batch=8, d=D):
+    return {"x": ((batch, d), "float32"), "y": ((batch, d), "float32")}
+
+
+def assert_grads_close(got, want, atol=1e-5):
+    import numpy as np
+    for bucket in want:
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(a, b, atol=atol,
+                                                    rtol=1e-4),
+            got[bucket], want[bucket])

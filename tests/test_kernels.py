@@ -1,0 +1,145 @@
+"""Pallas kernel validation (interpret=True): shape/dtype sweeps with
+assert_allclose against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (130, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        x = rand(0, shape, dtype)
+        w = rand(1, shape[-1:], dtype, 0.5) + 1.0
+        got = rmsnorm_pallas(x, w, interpret=True)
+        want = ref.rmsnorm_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal", [
+        (1, 2, 2, 32, 32, 16, True),
+        (2, 4, 1, 64, 64, 32, True),      # MQA
+        (1, 8, 2, 64, 128, 16, True),     # GQA, cross lengths
+        (1, 2, 2, 32, 48, 16, False),
+        (1, 2, 2, 40, 72, 8, True),       # non-divisible by blocks
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd_matches_naive(self, b, hq, hkv, sq, skv, d, causal,
+                               dtype):
+        q = rand(0, (b, hq, sq, d), dtype)
+        k = rand(1, (b, hkv, skv, d), dtype)
+        v = rand(2, (b, hkv, skv, d), dtype)
+        off = skv - sq if causal else 0
+        got = flash_attention_fwd_pallas(q, k, v, causal=causal,
+                                         q_offset=off, block_q=16,
+                                         block_kv=16, interpret=True)
+        want = ref.naive_attention(q, k, v, causal=causal, q_offset=off)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    def test_custom_vjp_grads(self):
+        q = rand(0, (1, 2, 32, 16))
+        k = rand(1, (1, 2, 32, 16))
+        v = rand(2, (1, 2, 32, 16))
+
+        def f(fn):
+            return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+        g1 = jax.grad(f(lambda *a: ops.flash_attention(*a, block_kv=16)),
+                      argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f(lambda *a: ref.naive_attention(*a, causal=True)),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-4)
+
+
+class TestMoEGMM:
+    @pytest.mark.parametrize("e,cap,d,f", [
+        (4, 32, 64, 128), (2, 16, 32, 32), (8, 130, 64, 96)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, e, cap, d, f, dtype):
+        x = rand(0, (e, cap, d), dtype, 0.3)
+        w = rand(1, (e, d, f), dtype, 0.3)
+        got = moe_gmm_pallas(x, w, interpret=True)
+        want = ref.moe_gmm_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+            rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+class TestMambaScanKernel:
+    @pytest.mark.parametrize("b,s,c,n,bc", [
+        (1, 16, 8, 4, 4), (2, 24, 16, 8, 8), (1, 8, 6, 4, 4)])
+    def test_matches_ref(self, b, s, c, n, bc):
+        xz = rand(0, (b, s, c), scale=0.5)
+        dt = jax.nn.softplus(rand(1, (b, s, c)))
+        A = -jnp.exp(rand(2, (c, n), scale=0.2))
+        B = rand(3, (b, s, n), scale=0.5)
+        C = rand(4, (b, s, n), scale=0.5)
+        D = jnp.ones((c,))
+        got_y, got_h = mamba_scan_pallas(xz, dt, A, B, C, D,
+                                         block_c=bc, interpret=True)
+        want_y, want_h = ref.ssm_scan_ref(xz, dt, A, B, C, D, chunk=8)
+        np.testing.assert_allclose(got_y, want_y, atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(got_h, want_h, atol=1e-5, rtol=1e-4)
+
+    def test_state_continuation(self):
+        b, s, c, n = 1, 16, 8, 4
+        xz = rand(0, (b, s, c), scale=0.5)
+        dt = jax.nn.softplus(rand(1, (b, s, c)))
+        A = -jnp.exp(rand(2, (c, n), scale=0.2))
+        B = rand(3, (b, s, n), scale=0.5)
+        C = rand(4, (b, s, n), scale=0.5)
+        D = jnp.ones((c,))
+        y_full, h_full = mamba_scan_pallas(xz, dt, A, B, C, D,
+                                           block_c=4, interpret=True)
+        y1, h1 = mamba_scan_pallas(xz[:, :8], dt[:, :8], A, B[:, :8],
+                                   C[:, :8], D, block_c=4, interpret=True)
+        y2, h2 = mamba_scan_pallas(xz[:, 8:], dt[:, 8:], A, B[:, 8:],
+                                   C[:, 8:], D, h0=h1, block_c=4,
+                                   interpret=True)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(h2, h_full, atol=1e-5, rtol=1e-4)
+
+
+class TestRegistry:
+    def test_register_swaps_model_impls(self):
+        """A reduced model forward must agree with and without the
+        Pallas kernels installed."""
+        from repro.configs import get_config
+        from repro.models import init, train_loss
+        cfg = get_config("qwen1.5-0.5b").reduced()
+        params = init(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+        base = float(train_loss(cfg, params, batch))
+        ops.register_kernels()
+        try:
+            with_kernels = float(train_loss(cfg, params, batch))
+        finally:
+            ops.unregister_kernels()
+        assert abs(base - with_kernels) < 1e-4, (base, with_kernels)

@@ -1,0 +1,187 @@
+"""Timeline simulator tests: pipeline makespan sanity, comm/compute
+overlap via streams (Fig 4), DualPipeV hiding EP all-to-alls (Fig 2/3),
+and network interference between concurrent flows (the paper's measured
+1.46x EP slowdown from background DP all-reduces)."""
+import jax
+import pytest
+
+from helpers import (inputs_spec, make_mlp_forward, make_mlp_params,
+                     make_moe_forward)
+from repro.core import F, Replicate, Shard, compile_training
+from repro.core.schedules import build_rank_sequences, emit_directives
+from repro.runtime.costmodel import CostModel
+from repro.runtime.simulator import TimelineSimulator
+
+jax.config.update("jax_platform_name", "cpu")
+
+BATCH = 32
+T_CHUNK = 10e-3
+
+
+def const_cost(node):
+    # ZeroBubble-style split backward: Bi + Bw together cost one B
+    if node.dims.get("PASS") in ("Bi", "Bw"):
+        return T_CHUNK / 2
+    return T_CHUNK
+
+
+def build_prog(kind, R, n_mb, forward_factory, n_stage, extra=None,
+               batch=BATCH):
+    S = {"gpipe": R, "1f1b": R}.get(kind, 2 * R)
+    assert S == n_stage
+    params = make_mlp_params(jax.random.PRNGKey(0), n_stage)
+    fwd = forward_factory(n_stage)
+    seqs = build_rank_sequences(kind, R, n_mb, n_stage)
+    sched = emit_directives(kind, seqs,
+                            device_groups=[[r] for r in range(R)],
+                            n_stages=n_stage)
+    if extra:
+        sched = sched[:n_stage] + extra + sched[n_stage:]
+    return compile_training(fwd, params, inputs_spec(batch), sched), params
+
+
+class TestMakespan:
+    def test_gpipe_formula(self):
+        """Near-zero comm: makespan ~ (M + R - 1) x (tF + tB)."""
+        R, M = 4, 8
+        prog, _ = build_prog("gpipe", R, M, make_mlp_forward, R)
+        cost = CostModel(ici_bw=1e15, comm_latency=0.0)
+        sim = TimelineSimulator(prog, cost,
+                                chunk_seconds_override=const_cost)
+        res = sim.run()
+        ideal = (M + R - 1) * 2 * T_CHUNK
+        assert res.makespan == pytest.approx(ideal, rel=0.25)
+
+    def test_1f1b_not_slower_than_gpipe(self):
+        R, M = 4, 8
+        times = {}
+        for kind in ("gpipe", "1f1b"):
+            prog, _ = build_prog(kind, R, M, make_mlp_forward, R)
+            cost = CostModel(ici_bw=1e15, comm_latency=0.0)
+            res = TimelineSimulator(
+                prog, cost, chunk_seconds_override=const_cost).run()
+            times[kind] = res.makespan
+        assert times["1f1b"] <= times["gpipe"] * 1.05
+
+
+class TestStreamOverlap:
+    def test_separate_reduce_stream_overlaps(self):
+        """DP grad all-reduce on its own stream overlaps the remaining
+        backward compute; on the compute stream it serializes (Fig 4b)."""
+        n_stage = 6
+        params = make_mlp_params(jax.random.PRNGKey(0), n_stage)
+        fwd = make_mlp_forward(n_stage)
+        spans = {}
+        for name, stream in [("same", None), ("separate", "dp")]:
+            sched = [Replicate(F(), devices=[0, 1], reduce_stream=stream)]
+            prog = compile_training(fwd, params, inputs_spec(BATCH), sched)
+            # big grads so the ARs are comparable to compute time
+            cost = CostModel(ici_bw=2e5, comm_latency=0.0)
+            res = TimelineSimulator(
+                prog, cost, chunk_seconds_override=const_cost).run()
+            spans[name] = res.makespan
+        assert spans["separate"] < spans["same"] * 0.9
+
+
+class TestDualPipeV:
+    def _moe(self, kind, R, n_mb, ici_bw):
+        """Paper Fig. 1 layout: PP across stages, each PP rank group holds
+        DP-2 for non-expert chunks and EP-2 for expert chunks."""
+        from repro.core.schedules import rank_of_stage
+        S = 2 * R
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        fwd = make_moe_forward(S, experts_every=2)
+        for i in range(S - 1):
+            if i % 2 == 1:
+                k = jax.random.PRNGKey(100 + i)
+                params[f"exp{i}"] = {
+                    "w1": jax.random.normal(k, (16, 16)) * 0.1,
+                    "w2": jax.random.normal(k, (16, 16)) * 0.1}
+        groups = [[2 * r, 2 * r + 1] for r in range(R)]
+        seqs = build_rank_sequences(kind, R, n_mb, S)
+        sched = emit_directives(kind, seqs, device_groups=groups,
+                                n_stages=S)
+        extra = []
+        for s in range(S):
+            g = groups[rank_of_stage(kind, s, R, S)]
+            extra.append(Replicate(F(**{"pp": s, "ep": "-"}), devices=g,
+                                   reduce_stream="dp"))
+            if s % 2 == 1 and s < S - 1:
+                extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
+                                   stream="ep"))
+        sched = sched[:S] + extra + sched[S:]
+        prog = compile_training(fwd, params, inputs_spec(BATCH), sched,
+                                split_backward=(kind == "dualpipev"))
+        cost = CostModel(ici_bw=ici_bw, comm_latency=0.0)
+        return TimelineSimulator(prog, cost,
+                                 chunk_seconds_override=const_cost).run()
+
+    def test_dualpipev_hides_a2a(self):
+        """With expensive EP all-to-alls, DualPipeV's overlapped F+B pairs
+        beat interleaved-1F1B (the paper's Fig 7 phenomenon; it reports
+        10-13% over 1F1B baselines — at this comm/compute ratio the
+        simulator shows ~11%)."""
+        R, n_mb = 2, 8
+        ici_bw = 2.5e4  # a2a ~ chunk-scale: EP comm on the critical path
+        t_inter = self._moe("interleaved_1f1b", R, n_mb, ici_bw).makespan
+        t_dual = self._moe("dualpipev", R, n_mb, ici_bw).makespan
+        assert t_dual < t_inter * 0.95, (t_dual, t_inter)
+
+    def test_dualpipev_parity_when_comm_free(self):
+        """No comm cost -> the two schedules should be comparable."""
+        R, n_mb = 2, 8
+        t_inter = self._moe("interleaved_1f1b", R, n_mb, 1e15).makespan
+        t_dual = self._moe("dualpipev", R, n_mb, 1e15).makespan
+        assert t_dual <= t_inter * 1.1
+
+
+class TestInterference:
+    @staticmethod
+    def _mini_prog(with_background_ar):
+        """A bare DAG: one EP a2a, optionally one concurrent DP AR on a
+        different stream over the same devices."""
+        from repro.core import TrainingDAG, ValueSpec, build_plan
+        from repro.core.compiler import CompiledProgram
+        dag = TrainingDAG()
+        dag.new_node(kind="comm", op="all_to_all", name="a2a",
+                     devices=(0, 1), group=(0, 1), stream="ep",
+                     payload="act", out_specs=[ValueSpec((1000,),
+                                               "float32")])
+        if with_background_ar:
+            dag.new_node(kind="comm", op="all_reduce", name="ar",
+                         devices=(0, 1), group=(0, 1), stream="dp",
+                         payload="grad",
+                         out_specs=[ValueSpec((4000,), "float32")])
+        from repro.core.passes import assign_default_streams
+        assign_default_streams(dag)
+        plan = build_plan(dag)
+        return CompiledProgram(dag=dag, plan=plan, params={}, schedule=())
+
+    def test_background_allreduce_slows_a2a(self):
+        """Concurrent flows share link bandwidth: an EP all-to-all slows
+        down when a DP all-reduce runs in the background on its own
+        stream (the paper measured a 1.46x slowdown; the fluid model
+        gives 2x while both flows are active)."""
+        cost = CostModel(ici_bw=1e6, comm_latency=0.0)
+        solo = TimelineSimulator(self._mini_prog(False), cost).run()
+        both = TimelineSimulator(self._mini_prog(True), cost).run()
+
+        def a2a_time(res):
+            rs = [r for r in res.records if r.name == "a2a"
+                  and r.device == 0]
+            return rs[0].end - rs[0].start
+
+        assert a2a_time(both) > a2a_time(solo) * 1.3
+
+
+class TestStraggler:
+    def test_straggler_stretches_makespan(self):
+        R, M = 4, 8
+        prog, _ = build_prog("1f1b", R, M, make_mlp_forward, R)
+        cost = CostModel(ici_bw=1e15, comm_latency=0.0)
+        base = TimelineSimulator(
+            prog, cost, chunk_seconds_override=const_cost).run().makespan
+        slow = TimelineSimulator(
+            prog, cost, chunk_seconds_override=const_cost,
+            device_slowdown={1: 1.5}).run().makespan
+        assert slow > base * 1.2
