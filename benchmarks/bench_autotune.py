@@ -1,0 +1,57 @@
+"""Autotuner accuracy + win-rate: predicted vs measured step time.
+
+For three configs from ``src/repro/configs`` the tuner's *predicted*
+step time (analytic roofline chunk costs, the search's scoring path) is
+compared against a *measured* step time: the same candidate re-simulated
+with chunk costs taken from XLA's own ``cost_analysis`` of the lowered
+proxy exec functions (the repo's ground-truth cost source on CPU; on
+real hardware this column is replaced by wall-clock).  Also reports the
+winner's predicted speedup over the default 1F1B baseline — the
+autotuner's reason to exist.
+
+    PYTHONPATH=src python -m benchmarks.bench_autotune
+"""
+from __future__ import annotations
+
+import time
+
+from repro import tune
+from repro.configs import get_config
+
+from .common import emit
+
+CONFIGS = ("qwen3-1b", "qwen3-9b", "deepseek-moe-16b")
+TOKENS = 16384
+MESH = tune.MeshSpec(pp=2, dp=2)
+
+
+def main() -> None:
+    for name in CONFIGS:
+        cfg = get_config(name)
+        t0 = time.time()
+        plan = tune.search(cfg, MESH, budget=None, tokens=TOKENS,
+                           use_cache=False)
+        search_s = time.time() - t0
+        # measured: XLA cost_analysis-backed simulation of winner+baseline
+        meas_win = tune.score_candidate(
+            cfg, MESH, plan.candidate, tokens=TOKENS, use_xla_cost=True)
+        meas_base = tune.score_candidate(
+            cfg, MESH, plan.baseline.candidate, tokens=TOKENS,
+            use_xla_cost=True)
+        pred = plan.predicted_step_seconds
+        meas = meas_win.step_seconds
+        emit(f"autotune_{name}_winner_pred", pred * 1e6,
+             f"cand={plan.candidate.label()};peak_gib="
+             f"{plan.predicted_peak_bytes/2**30:.2f};"
+             f"search_s={search_s:.1f};n={plan.n_evaluated}")
+        emit(f"autotune_{name}_winner_meas", meas * 1e6,
+             f"pred_over_meas={pred/meas:.3f}x")
+        emit(f"autotune_{name}_baseline_meas",
+             meas_base.step_seconds * 1e6,
+             f"pred={plan.baseline.step_seconds*1e6:.1f};"
+             f"win_meas_speedup={meas_base.step_seconds/meas:.3f}x;"
+             f"win_pred_speedup={plan.speedup_vs_baseline():.3f}x")
+
+
+if __name__ == "__main__":
+    main()

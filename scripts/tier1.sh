@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Fast tier-1 verification loop: the full suite's heavyweight modules
+# (arch smoke sweep, kernel grids, multi-device subprocess tests) are
+# marked `slow` and skipped here, so this finishes in well under the
+# 120s the slow modules alone take.  The canonical full run stays
+#
+#   PYTHONPATH=src python -m pytest -x -q
+#
+# Usage: scripts/tier1.sh [extra pytest args]
+#   TIER1_TIMEOUT=300  hard wall-clock cap in seconds (default 300)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+exec timeout "${TIER1_TIMEOUT:-300}" \
+    python -m pytest -x -q -m "not slow" "$@"

@@ -103,9 +103,20 @@ class CheckpointManager:
     def _dir(self, step: int) -> pathlib.Path:
         return self.root / f"step_{step:08d}"
 
+    def _steps_on_disk(self) -> list:
+        # strict name filter: an in-flight save's "step_N.tmp" directory
+        # (atomic-rename protocol in save_tree) must not be picked up by
+        # a concurrent latest_step/_gc — only fully renamed checkpoints
+        # count
+        steps = []
+        for p in self.root.glob("step_*"):
+            suffix = p.name.split("_", 1)[1]
+            if p.is_dir() and suffix.isdigit():
+                steps.append(int(suffix))
+        return sorted(steps)
+
     def latest_step(self) -> Optional[int]:
-        steps = sorted(int(p.name.split("_")[1])
-                       for p in self.root.glob("step_*") if p.is_dir())
+        steps = self._steps_on_disk()
         return steps[-1] if steps else None
 
     def wait(self) -> None:
@@ -141,7 +152,6 @@ class CheckpointManager:
         return tree, manifest["extra"]
 
     def _gc(self) -> None:
-        steps = sorted(int(p.name.split("_")[1])
-                       for p in self.root.glob("step_*") if p.is_dir())
+        steps = self._steps_on_disk()
         for s in steps[:-self.keep]:
             shutil.rmtree(self._dir(s), ignore_errors=True)

@@ -57,9 +57,42 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--resume", action="store_true")
+    # strategy autotuner (repro.tune): pick PP schedule / microbatches /
+    # ZeRO / EP for the FULL config before training the reduced one
+    ap.add_argument("--autotune", action="store_true",
+                    help="search the strategy space for the full config "
+                    "and print/save the winning plan before training")
+    ap.add_argument("--tune-pp", type=int, default=4)
+    ap.add_argument("--tune-dp", type=int, default=2)
+    ap.add_argument("--tune-budget-gb", type=float, default=None,
+                    help="per-device HBM budget in GiB (default: none)")
+    ap.add_argument("--tune-tokens", type=int, default=None,
+                    help="global tokens/step for the tuner (default: "
+                    "repro.tune.DEFAULT_TOKENS)")
     args = ap.parse_args(argv)
 
     base = get_config(args.arch)
+
+    if args.autotune:
+        from repro import tune
+        mesh = tune.MeshSpec(pp=args.tune_pp, dp=args.tune_dp)
+        budget = (args.tune_budget_gb * 2**30
+                  if args.tune_budget_gb else None)
+        tokens = args.tune_tokens or tune.DEFAULT_TOKENS
+        try:
+            plan = tune.search(base, mesh, budget, tokens=tokens)
+        except tune.NoFeasiblePlanError as e:
+            print(f"autotune: {e}")
+            print("autotune: raise --tune-budget-gb, --tune-pp/--tune-dp,"
+                  " or shrink the model")
+            return 2
+        print(plan.summary())
+        plan_path = pathlib.Path(args.ckpt_dir) / base.name / "plan.json"
+        plan_path.parent.mkdir(parents=True, exist_ok=True)
+        import json
+        plan_path.write_text(json.dumps(plan.to_dict(), indent=1))
+        print(f"plan saved to {plan_path} "
+              f"({len(plan.directives())} directives)")
     cfg = base.reduced(n_layers=args.layers, d_model=args.d_model,
                        d_ff=args.d_model * 4, vocab=args.vocab,
                        n_heads=max(4, args.d_model // 64))

@@ -1,6 +1,7 @@
 """Piper strategy-agnostic runtime: interpreter + timeline simulator."""
 from .interpreter import Interpreter, RunResult
-from .memory import DeviceLedger, bucket_persistent_bytes
+from .memory import (DeviceLedger, bucket_persistent_bytes,
+                     timeline_peak_bytes)
 
 __all__ = ["Interpreter", "RunResult", "DeviceLedger",
-           "bucket_persistent_bytes"]
+           "bucket_persistent_bytes", "timeline_peak_bytes"]

@@ -1,0 +1,30 @@
+"""Simulator-guided strategy autotuner (DESIGN.md §8).
+
+Closes the loop between Piper's strategy language and its performance
+models: enumerate directive compositions, score them on the timeline
+simulator + cost model, reject over-budget candidates, cache the winner.
+
+    from repro.configs import get_config
+    from repro import tune
+
+    plan = tune.search(get_config("qwen3-1b"),
+                       tune.MeshSpec(pp=4, dp=2),
+                       budget=16 * 2**30)
+    print(plan.summary())
+    directives = plan.directives()   # feed to compile_training
+"""
+from .cache import PlanCache, fingerprint
+from .proxy import (build_candidate_program, candidate_directives,
+                    decompose, make_chunk_cost)
+from .search import (DEFAULT_TOKENS, NoFeasiblePlanError, Plan, Score,
+                     score_candidate, search)
+from .space import (SCHEDULE_KINDS, Candidate, MeshSpec, SearchSpace,
+                    baseline_candidate)
+
+__all__ = [
+    "SCHEDULE_KINDS", "DEFAULT_TOKENS", "Candidate", "MeshSpec",
+    "NoFeasiblePlanError", "Plan", "PlanCache", "Score", "SearchSpace",
+    "baseline_candidate", "build_candidate_program",
+    "candidate_directives", "decompose", "fingerprint", "make_chunk_cost",
+    "score_candidate", "search",
+]

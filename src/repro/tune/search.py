@@ -1,0 +1,243 @@
+"""Simulator-guided strategy search (DESIGN.md §8).
+
+``search(config, mesh, budget)`` closes the loop the paper leaves to the
+user: it enumerates directive compositions (schedule × microbatches ×
+ZeRO × EP), scores every candidate on the timeline simulator with the
+analytic cost model, rejects candidates whose estimated per-device peak
+memory exceeds the budget, and returns the fastest feasible ``Plan``.
+Results are cached as JSON keyed by (config, mesh, budget, space, cost)
+so repeated launches skip the sweep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..runtime.costmodel import CostModel
+from ..runtime.memory import timeline_peak_bytes
+from ..runtime.simulator import TimelineSimulator
+from .cache import PlanCache, fingerprint
+from .proxy import (build_candidate_program, candidate_directives,
+                    decompose, make_chunk_cost)
+from .space import Candidate, MeshSpec, SearchSpace, baseline_candidate
+
+# default global batch: 128k tokens per step (divisible by every mb/dp
+# combination the default space enumerates)
+DEFAULT_TOKENS = 131072
+
+
+class NoFeasiblePlanError(RuntimeError):
+    """Every candidate exceeded the per-device memory budget."""
+
+
+@dataclass(frozen=True)
+class Score:
+    candidate: Candidate
+    step_seconds: float        # simulator-predicted step time
+    peak_bytes: int            # max over devices, estimated
+    feasible: bool
+
+    def to_dict(self) -> dict:
+        return {"candidate": self.candidate.to_dict(),
+                "step_seconds": self.step_seconds,
+                "peak_bytes": self.peak_bytes,
+                "feasible": self.feasible}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Score":
+        return Score(candidate=Candidate.from_dict(d["candidate"]),
+                     step_seconds=float(d["step_seconds"]),
+                     peak_bytes=int(d["peak_bytes"]),
+                     feasible=bool(d["feasible"]))
+
+
+@dataclass
+class Plan:
+    """The autotuner's output: the winning strategy plus enough metadata
+    to reproduce the decision (and to rebuild the directive list)."""
+    config_name: str
+    mesh: MeshSpec
+    tokens: int
+    budget_bytes: Optional[int]
+    candidate: Candidate
+    predicted_step_seconds: float
+    predicted_peak_bytes: int
+    baseline: Score
+    leaderboard: list = field(default_factory=list)   # top Scores
+    n_evaluated: int = 0
+    n_rejected: int = 0
+    from_cache: bool = False
+    _config: object = field(default=None, repr=False, compare=False)
+
+    def speedup_vs_baseline(self) -> float:
+        return self.baseline.step_seconds / self.predicted_step_seconds
+
+    def directives(self, config=None) -> list:
+        """Re-emit the winning Piper directive list (Place/Replicate/
+        Shard/Split/Order) — deterministic given the candidate."""
+        cfg = config if config is not None else self._config
+        if cfg is None:
+            raise ValueError("pass the ArchConfig to rebuild directives "
+                             "from a deserialized Plan")
+        sm = decompose(cfg, self.mesh.n_stages)
+        return candidate_directives(cfg, self.mesh, self.candidate, sm)
+
+    def summary(self) -> str:
+        gb = self.predicted_peak_bytes / 2**30
+        lines = [
+            f"plan[{self.config_name}] pp={self.mesh.pp} dp={self.mesh.dp}"
+            f" tokens={self.tokens}"
+            + (" (cached)" if self.from_cache else ""),
+            f"  winner   : {self.candidate.label()}  "
+            f"step={self.predicted_step_seconds*1e3:.2f}ms  peak={gb:.2f}GiB",
+            f"  baseline : {self.baseline.candidate.label()}  "
+            f"step={self.baseline.step_seconds*1e3:.2f}ms  "
+            f"(speedup {self.speedup_vs_baseline():.3f}x)",
+            f"  searched : {self.n_evaluated} candidates, "
+            f"{self.n_rejected} over budget",
+        ]
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "config_name": self.config_name,
+            "mesh": {"pp": self.mesh.pp, "dp": self.mesh.dp},
+            "tokens": self.tokens,
+            "budget_bytes": self.budget_bytes,
+            "candidate": self.candidate.to_dict(),
+            "predicted_step_seconds": self.predicted_step_seconds,
+            "predicted_peak_bytes": self.predicted_peak_bytes,
+            "baseline": self.baseline.to_dict(),
+            "leaderboard": [s.to_dict() for s in self.leaderboard],
+            "n_evaluated": self.n_evaluated,
+            "n_rejected": self.n_rejected,
+        }
+
+    @staticmethod
+    def from_dict(d: dict, *, from_cache: bool = False,
+                  config=None) -> "Plan":
+        return Plan(
+            config_name=d["config_name"],
+            mesh=MeshSpec(pp=int(d["mesh"]["pp"]), dp=int(d["mesh"]["dp"])),
+            tokens=int(d["tokens"]),
+            budget_bytes=(int(d["budget_bytes"])
+                          if d.get("budget_bytes") is not None else None),
+            candidate=Candidate.from_dict(d["candidate"]),
+            predicted_step_seconds=float(d["predicted_step_seconds"]),
+            predicted_peak_bytes=int(d["predicted_peak_bytes"]),
+            baseline=Score.from_dict(d["baseline"]),
+            leaderboard=[Score.from_dict(s)
+                         for s in d.get("leaderboard", [])],
+            n_evaluated=int(d.get("n_evaluated", 0)),
+            n_rejected=int(d.get("n_rejected", 0)),
+            from_cache=from_cache,
+            _config=config,
+        )
+
+
+# ---------------------------------------------------------------------------
+# scoring
+# ---------------------------------------------------------------------------
+
+def score_candidate(config, mesh: MeshSpec, cand: Candidate, *,
+                    tokens: int = DEFAULT_TOKENS,
+                    budget_bytes: Optional[int] = None,
+                    cost: Optional[CostModel] = None,
+                    use_xla_cost: bool = False) -> Score:
+    """Compile the candidate's proxy program and predict (step time,
+    peak memory).  ``use_xla_cost=True`` swaps the analytic chunk
+    roofline for XLA's own ``cost_analysis`` of the proxy exec functions
+    (slower; used by bench_autotune's predicted-vs-measured column)."""
+    cost = cost or CostModel()
+    prog, sm = build_candidate_program(config, mesh, cand, tokens)
+    override = (None if use_xla_cost
+                else make_chunk_cost(sm, tokens, cand.n_mb, cost))
+    sim = TimelineSimulator(prog, cost, chunk_seconds_override=override)
+    res = sim.run()
+    peaks = timeline_peak_bytes(prog, res.records)
+    peak = max(peaks.values())
+    feasible = budget_bytes is None or peak <= budget_bytes
+    return Score(candidate=cand, step_seconds=res.makespan,
+                 peak_bytes=peak, feasible=feasible)
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def search(config, mesh: MeshSpec, budget: Optional[float] = None, *,
+           tokens: int = DEFAULT_TOKENS,
+           space: Optional[SearchSpace] = None,
+           cost: Optional[CostModel] = None,
+           cache_dir: Optional[str] = None,
+           use_cache: bool = True,
+           top_k: int = 5,
+           progress: Optional[Callable[[Score], None]] = None) -> Plan:
+    """Pick the fastest feasible strategy for ``config`` on ``mesh``.
+
+    config : ArchConfig (from ``repro.configs.get_config``)
+    mesh   : MeshSpec(pp, dp)
+    budget : per-device memory budget in bytes (None = unlimited)
+    tokens : global batch size in tokens per step
+
+    Returns a ``Plan``; raises ``NoFeasiblePlanError`` when every
+    candidate exceeds the budget.  Identical inputs are served from the
+    JSON plan cache (``plan.from_cache`` is True)."""
+    space = space or SearchSpace()
+    cost = cost or CostModel()
+    budget_bytes = int(budget) if budget is not None else None
+
+    cache = PlanCache(cache_dir) if use_cache else None
+    key = fingerprint(config=config, mesh=mesh, budget=budget_bytes,
+                      tokens=tokens, space=space.to_dict(), cost=cost)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            return Plan.from_dict(hit, from_cache=True, config=config)
+
+    base = score_candidate(config, mesh, baseline_candidate(config, mesh),
+                           tokens=tokens, budget_bytes=budget_bytes,
+                           cost=cost)
+    scores: list[Score] = []
+    seen = set()
+    for cand in space.candidates(config, mesh, tokens):
+        if cand in seen:
+            continue
+        seen.add(cand)
+        s = (base if cand == base.candidate else
+             score_candidate(config, mesh, cand, tokens=tokens,
+                             budget_bytes=budget_bytes, cost=cost))
+        scores.append(s)
+        if progress is not None:
+            progress(s)
+
+    if not scores:
+        raise NoFeasiblePlanError(
+            f"search space is empty for {config.name} on pp={mesh.pp} "
+            f"dp={mesh.dp}: no candidate microbatch count divides "
+            f"tokens={tokens} evenly across dp={mesh.dp} (try a tokens "
+            f"value divisible by {4 * mesh.pp * max(mesh.dp, 1)})")
+    feasible = [s for s in scores if s.feasible]
+    if not feasible:
+        mn = min(scores, key=lambda s: s.peak_bytes) if scores else None
+        raise NoFeasiblePlanError(
+            f"no candidate fits {budget_bytes} bytes/device for "
+            f"{config.name} on pp={mesh.pp} dp={mesh.dp}"
+            + (f" (smallest footprint: {mn.candidate.label()} at "
+               f"{mn.peak_bytes} bytes)" if mn else ""))
+    # deterministic: ties break by enumeration order (stable sort)
+    ranked = sorted(feasible, key=lambda s: (s.step_seconds, s.peak_bytes))
+    best = ranked[0]
+    plan = Plan(
+        config_name=config.name, mesh=mesh, tokens=tokens,
+        budget_bytes=budget_bytes, candidate=best.candidate,
+        predicted_step_seconds=best.step_seconds,
+        predicted_peak_bytes=best.peak_bytes,
+        baseline=base, leaderboard=ranked[:top_k],
+        n_evaluated=len(scores),
+        n_rejected=len(scores) - len(feasible),
+        _config=config,
+    )
+    if cache is not None:
+        cache.put(key, plan.to_dict())
+    return plan

@@ -1,0 +1,113 @@
+"""Search space for the strategy autotuner (DESIGN.md §8).
+
+A ``Candidate`` is one point in the strategy space Piper's directives
+span: a pipeline schedule kind (the five builders in
+``core/schedules.py``), a microbatch count, a ZeRO stage for the
+``Replicate`` directive, and an expert-parallel degree for MoE configs.
+``SearchSpace.candidates`` enumerates the feasible points for a given
+config + mesh in a deterministic order (the tuner's tie-break is "first
+enumerated wins", so this order is part of the plan-cache contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+SCHEDULE_KINDS = ("gpipe", "1f1b", "zb1f1b", "interleaved_1f1b",
+                  "dualpipev")
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Logical device mesh for the tuner: ``pp`` pipeline ranks, each
+    rank a group of ``dp`` data-parallel replicas (devices are numbered
+    rank-major, as in the schedule benches)."""
+    pp: int
+    dp: int = 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.pp * self.dp
+
+    @property
+    def n_stages(self) -> int:
+        # every schedule kind runs the same 2R-stage model so makespans
+        # are apples-to-apples (1f1b/gpipe place 2 consecutive stages
+        # per rank; interleaved/dualpipev use virtual stages)
+        return 2 * self.pp
+
+    def device_groups(self) -> list:
+        return [[r * self.dp + i for i in range(self.dp)]
+                for r in range(self.pp)]
+
+
+@dataclass(frozen=True)
+class Candidate:
+    kind: str            # one of SCHEDULE_KINDS
+    n_mb: int            # microbatch count (Split directive)
+    zero: int = 0        # ZeRO stage of Replicate (0 = no DP groups)
+    ep: int = 1          # expert-parallel degree (1 = replicate experts)
+
+    def label(self) -> str:
+        return (f"{self.kind}/mb{self.n_mb}"
+                + (f"/zero{self.zero}" if self.zero else "")
+                + (f"/ep{self.ep}" if self.ep > 1 else ""))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "Candidate":
+        return Candidate(kind=d["kind"], n_mb=int(d["n_mb"]),
+                         zero=int(d.get("zero", 0)), ep=int(d.get("ep", 1)))
+
+
+@dataclass(frozen=True)
+class SearchSpace:
+    """Which strategy dimensions to sweep.  ``mb_multipliers`` are
+    multiples of the PP degree (n_mb = mult * pp); ZeRO and EP axes only
+    open up when the mesh has DP groups / the config has experts."""
+    kinds: tuple = SCHEDULE_KINDS
+    mb_multipliers: tuple = (2, 4)
+    zero_stages: tuple = (1, 3)
+    ep_degrees: Optional[tuple] = None   # None -> {1, dp}
+
+    def candidates(self, config, mesh: MeshSpec,
+                   tokens: int) -> Iterator[Candidate]:
+        has_experts = getattr(config, "moe", None) is not None
+        zeros = self.zero_stages if mesh.dp > 1 else (0,)
+        if self.ep_degrees is not None:
+            eps = self.ep_degrees
+        elif has_experts and mesh.dp > 1:
+            # the Shard directive requires expert placement to match the
+            # neighbouring chunks' device group, so EP is either off
+            # (experts replicate with the stage) or the full DP group
+            eps = (1, mesh.dp)
+        else:
+            eps = (1,)
+        for kind in self.kinds:
+            for mult in sorted(set(self.mb_multipliers)):
+                n_mb = mult * mesh.pp
+                if tokens % n_mb:
+                    continue
+                if (tokens // n_mb) % max(mesh.dp, 1):
+                    continue
+                for zero in zeros:
+                    for ep in eps:
+                        yield Candidate(kind=kind, n_mb=n_mb,
+                                        zero=zero, ep=ep)
+
+    def to_dict(self) -> dict:
+        return {"kinds": list(self.kinds),
+                "mb_multipliers": list(self.mb_multipliers),
+                "zero_stages": list(self.zero_stages),
+                "ep_degrees": (list(self.ep_degrees)
+                               if self.ep_degrees is not None else None)}
+
+
+def baseline_candidate(config, mesh: MeshSpec) -> Candidate:
+    """The hand-written default the tuner must beat: canonical 1F1B with
+    2·R microbatches, plain DP (ZeRO-1) and no expert parallelism."""
+    return Candidate(kind="1f1b", n_mb=2 * mesh.pp,
+                     zero=1 if mesh.dp > 1 else 0, ep=1)

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-family sweep; scripts/tier1.sh skips
+
 from repro.configs import ARCHS, get_config
 from repro.models import (decode_step, init, init_cache, params_count,
                           prefill, train_loss)

@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.slow  # interpret-mode grids; scripts/tier1.sh skips
 from repro.kernels.flash_attention import flash_attention_fwd_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas

@@ -4,15 +4,19 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # 8-device subprocess; scripts/tier1.sh skips
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import _mk
     from repro.models import layers as L
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _mk((2, 4), ("data", "model"))
     E, K, D, DEX = 8, 2, 16, 32
     B, S = 4, 16
     p = L.init_moe(jax.random.PRNGKey(0), D, DEX, E, 0, "swiglu",
@@ -20,7 +24,8 @@ SCRIPT = textwrap.dedent("""
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
 
     kw = dict(n_experts=E, top_k=K, act="swiglu", capacity_factor=8.0)
-    with jax.set_mesh(mesh):
+    set_mesh = getattr(jax, "set_mesh", None)
+    with (set_mesh(mesh) if set_mesh is not None else mesh):
         def f_ep(p, x):
             y, aux = L.moe_block_ep(p, x, mesh=mesh, dp_axes=("data",),
                                     tp_axis="model", **kw)

@@ -5,16 +5,19 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # 4-device subprocess; scripts/tier1.sh skips
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import _mk
     from repro.parallel.pipeline import pipeline_apply, pipeline_loss
 
     R, M, MB, D = 4, 8, 4, 16
-    mesh = jax.make_mesh((R,), ("pipe",),
-                         axis_types=(AxisType.Auto,))
+    mesh = _mk((R,), ("pipe",))
     k = jax.random.PRNGKey(0)
     ks = jax.random.split(k, R)
     params = {

@@ -11,7 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from helpers import (assert_grads_close, inputs_spec, make_batch,
                      make_mlp_forward, make_mlp_params, mlp_oracle)
