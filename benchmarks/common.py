@@ -62,7 +62,7 @@ def make_forward(n_stage, experts_every=0):
 
 def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
                      dp_per_rank: int = 1, experts_every: int = 0,
-                     zero: int = 0, d=D, seed=0):
+                     zero: int = 0, d=D, seed=0, overlap=None):
     """Compile a Piper program: PP(kind) x DP(dp_per_rank) x optional EP,
     with ZeRO level on the DP groups.  Every schedule kind runs the SAME
     2R-stage model (1f1b/gpipe place two consecutive stages per rank) so
@@ -94,5 +94,6 @@ def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
     sched = sched[:S] + extra + sched[S:]
     inputs = {"x": ((batch, d), "float32"), "y": ((batch, d), "float32")}
     prog = compile_training(fwd, params, inputs, sched,
-                            split_backward=(kind == "dualpipev"))
+                            split_backward=(kind == "dualpipev"),
+                            overlap=overlap)
     return prog, params

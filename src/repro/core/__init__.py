@@ -3,13 +3,15 @@ from .compiler import CompiledProgram, compile_training
 from .dag import Bucket, Edge, Node, TrainingDAG, ValueSpec
 from .directives import Order, Place, Replicate, Shard, Split
 from .filters import F
+from .overlap import OverlapConfig, apply_overlap
 from .plan import DevicePlan, GlobalPlan, ScheduleRejected, Task
 from .scheduler import build_plan, validate_comm_order
 from .trace import Recorder, TracedValue
 
 __all__ = [
     "Bucket", "CompiledProgram", "DevicePlan", "Edge", "F", "GlobalPlan",
-    "Node", "Order", "Place", "Recorder", "Replicate", "ScheduleRejected",
-    "Shard", "Split", "Task", "TracedValue", "TrainingDAG", "ValueSpec",
-    "build_plan", "compile_training", "validate_comm_order",
+    "Node", "Order", "OverlapConfig", "Place", "Recorder", "Replicate",
+    "ScheduleRejected", "Shard", "Split", "Task", "TracedValue",
+    "TrainingDAG", "ValueSpec", "apply_overlap", "build_plan",
+    "compile_training", "validate_comm_order",
 ]

@@ -36,11 +36,16 @@ def compile_training(
     schedule: Sequence[Directive] = (),
     build_bwd: bool = True,
     split_backward: bool = False,
+    overlap=None,
 ) -> CompiledProgram:
     """``forward(rec, tvs)`` builds the model using ``rec.annotate`` /
     ``rec.region`` and returns the loss TracedValue.  ``inputs`` maps graph
     input name -> (shape, dtype).  ``split_backward`` emits ZeroBubble
-    Bi/Bw chunk pairs (needed by dualpipev schedules)."""
+    Bi/Bw chunk pairs (needed by dualpipev schedules).  ``overlap`` is an
+    optional ``overlap.OverlapConfig``: when given, the joint
+    compute–communication overlap engine (collective bucketing, lookahead
+    gather prefetch, bubble-aware scheduling) runs as the tail of the
+    finalization pass layer."""
     rec = Recorder(params)
     tvs = {name: rec.input(name, shape, dtype)
            for name, (shape, dtype) in inputs.items()}
@@ -53,12 +58,15 @@ def compile_training(
     for directive in schedule:
         directive.apply(dag)
 
-    passes.run_all(dag)
+    passes.run_all(dag, overlap=overlap)
     plan = build_plan(dag)
     prog = CompiledProgram(dag=dag, plan=plan, params=params,
                            schedule=tuple(schedule))
     prog.stats = {**dag.stats(),
                   "devices": len(plan.devices),
                   "elided_allgathers": dag.meta.get("elided_allgathers", 0),
-                  "merged_reduces": dag.meta.get("merged_reduces", 0)}
+                  "merged_reduces": dag.meta.get("merged_reduces", 0),
+                  "fused_gathers": dag.meta.get("fused_gathers", 0),
+                  "fused_reduce_scatters":
+                      dag.meta.get("fused_reduce_scatters", 0)}
     return prog

@@ -124,6 +124,11 @@ class Node:
     # accounting / scheduling metadata
     meta: dict[str, Any] = field(default_factory=dict)
 
+    def total_out_bytes(self) -> int:
+        """Payload bytes this node produces (sum over output slots) —
+        the fusion budget / wire-size / stream-occupancy unit."""
+        return sum(s.nbytes for s in self.out_specs)
+
     @property
     def is_chunk(self) -> bool:
         return self.kind == "chunk"
@@ -252,6 +257,10 @@ class TrainingDAG:
                 f"training DAG has a cycle involving nodes {cyc[:8]} "
                 "(conflicting Order directives?)")
         return order
+
+    def topo_index(self) -> dict[int, int]:
+        """node id -> position in one deterministic topological order."""
+        return {nid: i for i, nid in enumerate(self.toposort())}
 
     def descendants_count(self) -> dict[int, int]:
         """#downstream nodes per node — the scheduler's priority metric."""

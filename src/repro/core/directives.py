@@ -115,7 +115,8 @@ class Replicate(Directive):
                     stream=self.reduce_stream, payload="grad",
                     out_specs=[grad_spec],
                     meta={"bucket": node.bucket, "part": part,
-                          "n_parts": n_parts},
+                          "n_parts": n_parts,
+                          "zero": 2 if self.shard_grads else 1},
                 )
                 # grads leave the backward chunk at output slot 0
                 dag.add_edge(nid, 0, comm.id, 0, grad_spec)
@@ -136,7 +137,7 @@ class Replicate(Directive):
                     dims=dict(node.dims), devices=devices, group=devices,
                     stream=self.gather_stream, payload="param",
                     out_specs=[spec],
-                    meta={"bucket": node.bucket},
+                    meta={"bucket": node.bucket, "zero": 3},
                 )
                 # param input arrives on the reserved "param" slot (-1)
                 dag.add_edge(comm.id, 0, nid, -1, spec)

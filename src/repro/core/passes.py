@@ -7,6 +7,11 @@
                        ZeRO-2 reduce-scatters are kept per-microbatch so
                        full-gradient buffers can be freed (paper §6.2)
   assign_default_streams — unassigned nodes run on the default stream
+
+When the compiler is handed an ``OverlapConfig``, the joint
+compute–communication overlap engine (``overlap.py``: collective
+bucketing, lookahead gather prefetch, bubble-aware scheduling hints)
+runs as the tail of this pass layer, after the dedup passes above.
 """
 from __future__ import annotations
 
@@ -100,7 +105,7 @@ def merge_grad_reduces(dag: TrainingDAG) -> None:
     unsharded gradients; ZeRO-2 reduce-scatters stay per-microbatch (the
     paper reduces 'after every backward pass instead of accumulating' to
     realize the memory savings)."""
-    topo_pos = {nid: i for i, nid in enumerate(dag.toposort())}
+    topo_pos = dag.topo_index()
     for bucket, b in dag.buckets.items():
         if b.replica_devices is None or b.shard_grads:
             continue
@@ -150,10 +155,13 @@ def assign_default_devices(dag: TrainingDAG) -> None:
             n.devices = dag.default_devices
 
 
-def run_all(dag: TrainingDAG) -> None:
+def run_all(dag: TrainingDAG, overlap=None) -> None:
     assign_default_devices(dag)
     insert_p2p(dag)
     elide_allgathers(dag)
     merge_grad_reduces(dag)
     assign_default_streams(dag)
+    if overlap is not None:
+        from .overlap import apply_overlap  # late: overlap imports us
+        apply_overlap(dag, overlap)
     dag.validate()

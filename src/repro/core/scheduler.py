@@ -104,8 +104,30 @@ def build_plan(dag: TrainingDAG) -> GlobalPlan:
     # comms (e.g. ZeRO-3 all-gathers, all ready at t=0) land in priority
     # order on their stream while Order directives reorder the consuming
     # chunks, and the two in-order streams deadlock.
+    #
+    # Bubble-aware mode (set by the overlap engine via
+    # ``dag.meta["bubble_aware"]``) extends the descendants-count
+    # priority with a stream-occupancy lookahead score: a collective
+    # anchors at its *gate* (last producer / prefetch temporal edge)
+    # instead of just-before its first consumer, so a comm that is
+    # already ready dispatches into the simulated bubble in front of it
+    # rather than queueing on its in-order stream behind a comm whose
+    # gate has not opened yet (head-of-line blocking would leave the
+    # bubble empty).  Anchor ties break toward the least-occupied
+    # (device-group, stream) lane.  Gather lanes stay deadlock-free
+    # under the interpreter's rate limiter because the overlap engine's
+    # prefetch gates are monotone in consumer order.  p2p keeps its
+    # production-order anchor — the paper's §4.3.2 send/recv ordering
+    # rule is a correctness constraint, not a performance choice.
+    bubble_aware = bool(dag.meta.get("bubble_aware"))
+    temporal_preds: dict[int, list[int]] = defaultdict(list)
+    for (u, v) in dag.temporal:
+        temporal_preds[v].append(u)
     anchor = {}
-    for nid, node in dag.nodes.items():
+    occupancy: dict[tuple, float] = defaultdict(float)
+    occ_load: dict[int, float] = defaultdict(float)
+    for nid, node in sorted(dag.nodes.items(),
+                            key=lambda kv: pos[kv[0]]):
         if node.is_chunk:
             anchor[nid] = (pos[nid], 0)
             continue
@@ -116,10 +138,17 @@ def build_plan(dag: TrainingDAG) -> GlobalPlan:
             # receiver must consume in the order produced); grad
             # reductions right after their producing backward
             anchor[nid] = (max(producers, default=pos[nid]), 1)
+        elif bubble_aware:
+            gates = producers + [pos[u] for u in temporal_preds[nid]]
+            anchor[nid] = (max(gates, default=-1), 2)
+            lane = (node.devices, node.stream)
+            occ_load[nid] = occupancy[lane]
+            occupancy[lane] += node.total_out_bytes()
         else:
             anchor[nid] = (min(consumers), -1)   # just before consumer
 
-    sched_order = list_schedule(lambda nid: (anchor[nid], pos[nid]))
+    sched_order = list_schedule(
+        lambda nid: (anchor[nid], occ_load[nid], pos[nid]))
 
     # ---- decompose into per-device tasks -----------------------------------
     devices = sorted({d for n in dag.nodes.values() for d in n.devices})

@@ -61,13 +61,18 @@ def timeline_peak_bytes(prog, records) -> dict:
     their consuming chunks' lifetime, ZeRO-2 full-grad buffers from the
     first backward chunk to the bucket's reduce-scatter.
 
-    ZeRO-3 buffers are deliberately NOT charged from all-gather
-    completion: param gathers have no data dependencies, so on the
-    simulated timeline they all fire near t=0 and charging there would
-    keep every full-param buffer live at once — the "defeats parameter
-    sharding" failure mode the interpreter's FSDP-style ``gather_limit``
-    exists to prevent.  Charging [first consumer, last consumer] models
-    that just-in-time prefetch.
+    ZeRO-3 buffers are charged in one of two modes.  Legacy plans
+    (no overlap engine): deliberately NOT from all-gather completion —
+    param gathers have no data dependencies, so on the simulated
+    timeline they all fire near t=0 and charging there would keep every
+    full-param buffer live at once, the "defeats parameter sharding"
+    failure mode the interpreter's FSDP-style ``gather_limit`` exists
+    to prevent; charging [first consumer, last consumer] models the
+    just-in-time prefetch instead.  Overlap-engine plans
+    (``dag.meta["overlap"]`` present): the engine's prefetch temporal
+    edges gate gather dispatch for real, so the (possibly fused)
+    full-param buffer is charged over its true lifetime — from the
+    gather's simulated completion to its last consumer.
 
     This is an *estimate* (used by the strategy autotuner to reject
     over-budget candidates): graph-input buffers and allocator
@@ -129,6 +134,7 @@ def timeline_peak_bytes(prog, records) -> dict:
             for d in (n.devices or ()):
                 gather_left.setdefault((g, d), set()).add(n.id)
 
+    overlap_mode = bool(dag.meta.get("overlap"))
     seen: set = set()
     events = sorted(records, key=lambda r: (r.end, r.start, r.node,
                                             r.device))
@@ -140,17 +146,24 @@ def timeline_peak_bytes(prog, records) -> dict:
         led = ledgers[d]
         bucket = n.bucket or n.meta.get("bucket")
         b = dag.buckets.get(bucket) if bucket else None
+        if (overlap_mode and n.is_comm and n.op == "all_gather"
+                and n.payload == "param"):
+            # prefetch gates make gather completion the honest
+            # materialization time of the (fused) full-param buffer
+            led.alloc(("fullparam", n.id), gather_param_bytes(dag, n))
         g = n.meta.get("param_from_comm")
-        if g is not None and b is not None:
+        if g is not None and not overlap_mode and g in dag.nodes:
             led.alloc(("fullparam", g),
-                      b.param_elems * WEIGHT_BYTES_PER_ELEM)
+                      gather_param_bytes(dag, dag.nodes[g]))
         if (n.is_chunk and b is not None and b.shard_grads
                 and n.dims.get("PASS") in ("B", "Bi", "Bw")):
             led.alloc(("fullgrad", bucket),
                       b.param_elems * GRAD_BYTES_PER_ELEM)
         if (n.is_comm and n.op == "reduce_scatter"
-                and n.payload == "grad" and bucket):
-            led.free(("fullgrad", bucket))
+                and n.payload == "grad"):
+            for bname in (n.meta.get("buckets")
+                          or ([bucket] if bucket else [])):
+                led.free(("fullgrad", bname))
         if cons.get((n.id, d)):
             led.alloc(("act", n.id), out_bytes(n))
         for e in dag.in_edges(n.id):
@@ -164,6 +177,17 @@ def timeline_peak_bytes(prog, records) -> dict:
             if not gather_left[(g, d)]:
                 led.free(("fullparam", g))
     return {d: led.peak for d, led in ledgers.items()}
+
+
+def gather_param_bytes(dag, gnode) -> int:
+    """Full-param bytes a (possibly fused) ZeRO-3 all-gather
+    materializes: sum over its member buckets."""
+    names = gnode.meta.get("buckets")
+    if not names:
+        b = gnode.meta.get("bucket")
+        names = [b] if b else []
+    return sum(dag.buckets[b].param_elems * WEIGHT_BYTES_PER_ELEM
+               for b in names if b in dag.buckets)
 
 
 def bucket_persistent_bytes(bucket, device: int) -> int:

@@ -147,7 +147,9 @@ class TimelineSimulator:
         return specs
 
     def _comm_wire_bytes(self, node) -> float:
-        nbytes = node.out_specs[0].nbytes if node.out_specs else 0
+        # fused (bucketed) collectives carry one spec per member; the
+        # wire moves the whole fused payload in one rendezvous
+        nbytes = node.total_out_bytes()
         group = len(node.group) if node.group else 2
         if node.op == "p2p":
             group = 2

@@ -29,7 +29,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from ..core import F, Replicate, Shard, compile_training
+from ..core import F, OverlapConfig, Replicate, Shard, compile_training
 from ..core.schedules import (build_rank_sequences, emit_directives,
                               rank_of_stage)
 from ..models.model import params_count
@@ -189,10 +189,24 @@ def candidate_directives(cfg, mesh: MeshSpec, cand: Candidate,
     return sched[:S] + extra + sched[S:]
 
 
+def candidate_overlap(cand: Candidate):
+    """The overlap-engine config a candidate's axes select (None keeps
+    the legacy just-in-time plan)."""
+    if cand.prefetch <= 0:
+        return None
+    return OverlapConfig(enabled=True, prefetch=cand.prefetch,
+                         bucket_bytes=cand.bucket_mb << 20)
+
+
+_UNSET = object()
+
+
 def build_candidate_program(cfg, mesh: MeshSpec, cand: Candidate,
-                            tokens: int):
+                            tokens: int, overlap=_UNSET):
     """Compile the proxy program for one candidate.  Returns
-    (CompiledProgram, StageModel)."""
+    (CompiledProgram, StageModel).  ``overlap`` overrides the
+    candidate's own overlap axes (used by bench_overlap's explicit
+    on/off comparison)."""
     sm = decompose(cfg, mesh.n_stages)
     params = make_proxy_params(sm)
     fwd = make_proxy_forward(sm)
@@ -201,7 +215,9 @@ def build_candidate_program(cfg, mesh: MeshSpec, cand: Candidate,
               "y": ((tokens, sm.d_model), PROXY_DTYPE)}
     prog = compile_training(
         fwd, params, inputs, sched,
-        split_backward=cand.kind in ("dualpipev", "zb1f1b"))
+        split_backward=cand.kind in ("dualpipev", "zb1f1b"),
+        overlap=(candidate_overlap(cand) if overlap is _UNSET
+                 else overlap))
     return prog, sm
 
 

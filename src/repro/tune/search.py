@@ -74,7 +74,11 @@ class Plan:
 
     def directives(self, config=None) -> list:
         """Re-emit the winning Piper directive list (Place/Replicate/
-        Shard/Split/Order) — deterministic given the candidate."""
+        Shard/Split/Order) — deterministic given the candidate.  The
+        candidate's overlap axes are NOT directives: pass
+        ``proxy.candidate_overlap(plan.candidate)`` as
+        ``compile_training(..., overlap=...)`` to re-apply the overlap
+        engine the winner was scored with."""
         cfg = config if config is not None else self._config
         if cfg is None:
             raise ValueError("pass the ArchConfig to rebuild directives "

@@ -48,11 +48,20 @@ class Candidate:
     n_mb: int            # microbatch count (Split directive)
     zero: int = 0        # ZeRO stage of Replicate (0 = no DP groups)
     ep: int = 1          # expert-parallel degree (1 = replicate experts)
+    # overlap-engine axes (core/overlap.py).  prefetch = 0 keeps the
+    # legacy plan (no engine: just-in-time gathers, optimistic
+    # simulation); prefetch >= 1 runs the engine with that lookahead
+    # depth, and bucket_mb is the fused-collective budget in MiB
+    # (0 = no fusion).
+    prefetch: int = 0
+    bucket_mb: int = 0
 
     def label(self) -> str:
         return (f"{self.kind}/mb{self.n_mb}"
                 + (f"/zero{self.zero}" if self.zero else "")
-                + (f"/ep{self.ep}" if self.ep > 1 else ""))
+                + (f"/ep{self.ep}" if self.ep > 1 else "")
+                + (f"/pf{self.prefetch}" if self.prefetch else "")
+                + (f"/bkt{self.bucket_mb}M" if self.bucket_mb else ""))
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -60,7 +69,9 @@ class Candidate:
     @staticmethod
     def from_dict(d: dict) -> "Candidate":
         return Candidate(kind=d["kind"], n_mb=int(d["n_mb"]),
-                         zero=int(d.get("zero", 0)), ep=int(d.get("ep", 1)))
+                         zero=int(d.get("zero", 0)), ep=int(d.get("ep", 1)),
+                         prefetch=int(d.get("prefetch", 0)),
+                         bucket_mb=int(d.get("bucket_mb", 0)))
 
 
 @dataclass(frozen=True)
@@ -72,6 +83,11 @@ class SearchSpace:
     mb_multipliers: tuple = (2, 4)
     zero_stages: tuple = (1, 3)
     ep_degrees: Optional[tuple] = None   # None -> {1, dp}
+    # overlap-engine axes, searched only for ZeRO-3 candidates (the
+    # stage with param all-gathers to hide): gather lookahead depth and
+    # fused-collective budget in MiB
+    prefetch_depths: tuple = (1, 4)
+    bucket_mbs: tuple = (0, 16)
 
     def candidates(self, config, mesh: MeshSpec,
                    tokens: int) -> Iterator[Candidate]:
@@ -95,15 +111,26 @@ class SearchSpace:
                     continue
                 for zero in zeros:
                     for ep in eps:
-                        yield Candidate(kind=kind, n_mb=n_mb,
-                                        zero=zero, ep=ep)
+                        if zero >= 3:
+                            pts = [(pf, bk)
+                                   for pf in sorted(set(
+                                       self.prefetch_depths))
+                                   for bk in sorted(set(self.bucket_mbs))]
+                        else:
+                            pts = [(0, 0)]
+                        for (pf, bk) in pts:
+                            yield Candidate(kind=kind, n_mb=n_mb,
+                                            zero=zero, ep=ep,
+                                            prefetch=pf, bucket_mb=bk)
 
     def to_dict(self) -> dict:
         return {"kinds": list(self.kinds),
                 "mb_multipliers": list(self.mb_multipliers),
                 "zero_stages": list(self.zero_stages),
                 "ep_degrees": (list(self.ep_degrees)
-                               if self.ep_degrees is not None else None)}
+                               if self.ep_degrees is not None else None),
+                "prefetch_depths": list(self.prefetch_depths),
+                "bucket_mbs": list(self.bucket_mbs)}
 
 
 def baseline_candidate(config, mesh: MeshSpec) -> Candidate:

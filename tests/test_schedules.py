@@ -163,6 +163,74 @@ class TestRejection:
         with pytest.raises(ScheduleRejected):
             validate_comm_order(dag, plan)
 
+    def test_mismatched_collective_order_rejected(self):
+        """Two ranks dispatching a (group, stream) communicator's
+        collectives in different orders must be rejected — on a real
+        cluster the mismatched rendezvous deadlocks (paper §4.3.2)."""
+        from repro.core import TrainingDAG, ValueSpec, validate_comm_order
+        from repro.core.plan import (ROLE_COLL, DevicePlan, GlobalPlan,
+                                     Task)
+        dag = TrainingDAG()
+        ag = dag.new_node(kind="comm", op="all_gather", name="ag",
+                          devices=(0, 1), group=(0, 1), payload="param",
+                          out_specs=[ValueSpec((8,))])
+        ar = dag.new_node(kind="comm", op="all_reduce", name="ar",
+                          devices=(0, 1), group=(0, 1), payload="grad",
+                          out_specs=[ValueSpec((8,))])
+        p0, p1 = DevicePlan(device=0), DevicePlan(device=1)
+        p0.append(Task(ag.id, 0, ROLE_COLL, "zero"))
+        p0.append(Task(ar.id, 0, ROLE_COLL, "zero"))
+        p1.append(Task(ar.id, 1, ROLE_COLL, "zero"))  # flipped on rank 1
+        p1.append(Task(ag.id, 1, ROLE_COLL, "zero"))
+        plan = GlobalPlan(device_plans={0: p0, 1: p1}, priorities={},
+                          devices=[0, 1])
+        with pytest.raises(ScheduleRejected, match="dispatch order"):
+            validate_comm_order(dag, plan)
+
+    def test_same_group_different_streams_may_reorder(self):
+        """Collectives on different streams use different communicators;
+        cross-stream order is unconstrained (paper: one communicator per
+        (group, stream))."""
+        from repro.core import TrainingDAG, ValueSpec, validate_comm_order
+        from repro.core.plan import (ROLE_COLL, DevicePlan, GlobalPlan,
+                                     Task)
+        dag = TrainingDAG()
+        ag = dag.new_node(kind="comm", op="all_gather", name="ag",
+                          devices=(0, 1), group=(0, 1), payload="param",
+                          out_specs=[ValueSpec((8,))])
+        ar = dag.new_node(kind="comm", op="all_reduce", name="ar",
+                          devices=(0, 1), group=(0, 1), payload="grad",
+                          out_specs=[ValueSpec((8,))])
+        p0, p1 = DevicePlan(device=0), DevicePlan(device=1)
+        p0.append(Task(ag.id, 0, ROLE_COLL, "gather"))
+        p0.append(Task(ar.id, 0, ROLE_COLL, "reduce"))
+        p1.append(Task(ar.id, 1, ROLE_COLL, "reduce"))
+        p1.append(Task(ag.id, 1, ROLE_COLL, "gather"))
+        plan = GlobalPlan(device_plans={0: p0, 1: p1}, priorities={},
+                          devices=[0, 1])
+        validate_comm_order(dag, plan)  # must not raise
+
+    def test_p2p_missing_recv_rejected(self):
+        """A send with no matching recv in the direction's sequence is a
+        p2p order violation (the receiver would consume the wrong
+        microbatch)."""
+        from repro.core import TrainingDAG, validate_comm_order
+        from repro.core.plan import (ROLE_RECV, ROLE_SEND, DevicePlan,
+                                     GlobalPlan, Task)
+        dag = TrainingDAG()
+        n0 = dag.new_node(kind="comm", op="p2p", name="p2p0",
+                          devices=(0, 1), meta={"pairs": [(0, 1)]})
+        n1 = dag.new_node(kind="comm", op="p2p", name="p2p1",
+                          devices=(0, 1), meta={"pairs": [(0, 1)]})
+        p0, p1 = DevicePlan(device=0), DevicePlan(device=1)
+        p0.append(Task(n0.id, 0, ROLE_SEND, "pp#snd"))
+        p0.append(Task(n1.id, 0, ROLE_SEND, "pp#snd"))
+        p1.append(Task(n0.id, 1, ROLE_RECV, "pp#rcv"))  # n1 recv missing
+        plan = GlobalPlan(device_plans={0: p0, 1: p1}, priorities={},
+                          devices=[0, 1])
+        with pytest.raises(ScheduleRejected, match="p2p order"):
+            validate_comm_order(dag, plan)
+
     def test_contradictory_order_rejected(self):
         """Order directives that contradict dataflow produce an IR cycle
         and are rejected at compile time."""
