@@ -40,6 +40,10 @@ def main() -> None:
             use_xla_cost=True)
         pred = plan.predicted_step_seconds
         meas = meas_win.step_seconds
+        # the winner as a canonical Strategy document (what the plan
+        # cache stores and launch/train.py --strategy replays)
+        emit(f"autotune_{name}_strategy", 0.0,
+             plan.strategy().label().replace(",", ";"))
         emit(f"autotune_{name}_winner_pred", pred * 1e6,
              f"cand={plan.candidate.label()};peak_gib="
              f"{plan.predicted_peak_bytes/2**30:.2f};"

@@ -29,6 +29,11 @@ bit-identical to the non-overlapped plan.
 A JSON summary lands in benchmarks/results/overlap/ (layout documented
 in benchmarks/README.md).
 
+All programs compile through the Strategy front door
+(``compile_training(strategy=...)``): the candidate's fragments with
+the Overlap fragment swapped per column (absent = legacy, enabled=False
+= off, enabled = on); per-row ``strategy`` labels land in the JSON.
+
   PYTHONPATH=src python -m benchmarks.bench_overlap
 """
 from __future__ import annotations
@@ -79,6 +84,7 @@ def simulate(name: str, mesh: MeshSpec, kind: str, overlap):
                                                cost)).run()
     peaks = timeline_peak_bytes(prog, res.records)
     return {
+        "strategy": prog.strategy.label(),
         "step_seconds": res.makespan,
         "exposed_comm_seconds": max(res.exposed_comm.values(), default=0.0),
         "peak_bytes": max(peaks.values()),

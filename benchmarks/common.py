@@ -1,6 +1,8 @@
 """Shared benchmark utilities: the Piper-IR MoE pipeline model used by
 the schedule/memory benches (stage granularity mirrors the paper's
-Qwen3 experiments at interpreter scale), plus CSV emit helpers."""
+Qwen3 experiments at interpreter scale), plus CSV emit helpers.
+Programs compile through the declarative Strategy API
+(``core.strategy``)."""
 from __future__ import annotations
 
 import sys
@@ -9,9 +11,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import F, Order, Place, Replicate, Shard, compile_training
-from repro.core.schedules import (build_rank_sequences, emit_directives,
-                                  rank_of_stage)
+from repro.core import (ExpertParallel, Mesh, Overlap, Pipeline, Strategy,
+                        ZeRO, compile_training)
 
 D = 32
 
@@ -60,40 +61,36 @@ def make_forward(n_stage, experts_every=0):
     return forward
 
 
+def build_pp_strategy(kind: str, n_ranks: int, n_mb: int,
+                      dp_per_rank: int = 1, experts_every: int = 0,
+                      zero: int = 0, overlap=None) -> Strategy:
+    """The declarative strategy the benches run: PP(kind) x
+    DP(dp_per_rank) x optional EP, ZeRO level on the DP groups, and the
+    optional overlap engine (``overlap``: an ``OverlapConfig`` or
+    None)."""
+    frags = [Pipeline(kind, n_mb=n_mb)]
+    if dp_per_rank > 1 or zero:
+        frags.append(ZeRO(stage=zero))
+    if experts_every:
+        frags.append(ExpertParallel())
+    if overlap is not None:
+        frags.append(Overlap.from_config(overlap))
+    return Strategy(Mesh(pp=n_ranks, dp=dp_per_rank), tuple(frags))
+
+
 def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
                      dp_per_rank: int = 1, experts_every: int = 0,
                      zero: int = 0, d=D, seed=0, overlap=None):
-    """Compile a Piper program: PP(kind) x DP(dp_per_rank) x optional EP,
-    with ZeRO level on the DP groups.  Every schedule kind runs the SAME
-    2R-stage model (1f1b/gpipe place two consecutive stages per rank) so
-    throughput comparisons are apples-to-apples."""
+    """Compile a Piper program through the Strategy front door:
+    PP(kind) x DP(dp_per_rank) x optional EP, with ZeRO level on the DP
+    groups.  Every schedule kind runs the SAME 2R-stage model
+    (1f1b/gpipe place two consecutive stages per rank) so throughput
+    comparisons are apples-to-apples."""
     S = 2 * n_ranks
     params = make_params(S, d, experts_every, seed)
     fwd = make_forward(S, experts_every)
-    groups = [[r * dp_per_rank + i for i in range(dp_per_rank)]
-              for r in range(n_ranks)]
-    seqs = build_rank_sequences(kind, n_ranks, n_mb, S)
-    sched = emit_directives(kind, seqs, device_groups=groups, n_stages=S)
-    extra = []
-    if dp_per_rank > 1 or zero:
-        for s in range(S):
-            g = groups[rank_of_stage(kind, s, n_ranks, S)]
-            extra.append(Replicate(
-                F(**{"pp": s, "ep": "-"}), devices=g,
-                reduce_stream="dp", gather_stream="ag",
-                shard_grads=zero >= 2, shard_params=zero >= 3))
-            if experts_every and s % experts_every == 1 and s < S - 1:
-                extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
-                                   stream="ep"))
-    elif experts_every:
-        for s in range(S):
-            if s % experts_every == 1 and s < S - 1:
-                g = groups[rank_of_stage(kind, s, n_ranks, S)]
-                extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
-                                   stream="ep"))
-    sched = sched[:S] + extra + sched[S:]
+    strat = build_pp_strategy(kind, n_ranks, n_mb, dp_per_rank,
+                              experts_every, zero, overlap)
     inputs = {"x": ((batch, d), "float32"), "y": ((batch, d), "float32")}
-    prog = compile_training(fwd, params, inputs, sched,
-                            split_backward=(kind == "dualpipev"),
-                            overlap=overlap)
+    prog = compile_training(fwd, params, inputs, strategy=strat)
     return prog, params

@@ -1,5 +1,7 @@
 """Benchmark aggregator — one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines.  Every Piper-IR program
+the sections compile goes through the declarative Strategy API
+(``common.build_pp_strategy`` / ``tune.candidate_strategy``).
 
   PYTHONPATH=src python -m benchmarks.run
 """

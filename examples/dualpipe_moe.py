@@ -9,9 +9,8 @@ TPU-constant simulator against interleaved-1F1B.
 import jax
 import jax.numpy as jnp
 
-from repro.core import F, Replicate, Shard, compile_training
-from repro.core.schedules import (build_rank_sequences, emit_directives,
-                                  rank_of_stage)
+from repro.core import (ExpertParallel, Mesh, Pipeline, Strategy, ZeRO,
+                        compile_training)
 from repro.runtime import Interpreter
 from repro.runtime.costmodel import CostModel
 from repro.runtime.simulator import TimelineSimulator
@@ -56,20 +55,15 @@ def make_params(seed=0):
     return p
 
 
-# --- Listing 2: the schedule -------------------------------------------------
-def schedule(kind):
-    groups = [[2*r, 2*r+1] for r in range(R)]   # DP-2 per PP rank
-    seqs = build_rank_sequences(kind, R, N_MB, S)
-    sched = emit_directives(kind, seqs, device_groups=groups, n_stages=S)
-    extra = []
-    for s in range(S):
-        g = groups[rank_of_stage(kind, s, R, S)]
-        extra.append(Replicate(F(pp=s, ep="-"), devices=g,
-                               reduce_stream="dp"))       # DP for attn
-        if s % 2 == 1 and s < S - 1:
-            extra.append(Shard(F(pp=s, ep="*"), devices=g,
-                               stream="ep"))              # EP for experts
-    return sched[:S] + extra + sched[S:]
+# --- Listing 2: the strategy -------------------------------------------------
+def strategy(kind):
+    """PP(kind) x DP-2 x EP, declared over a named-axis mesh — the
+    fragments lower to the paper's Place/Replicate/Shard/Split/Order
+    directive list in canonical order."""
+    return Strategy(Mesh(pp=R, dp=2),
+                    Pipeline(kind, n_mb=N_MB)     # stage placement + order
+                    | ZeRO(stage=1)               # DP for attn (all-reduce)
+                    | ExpertParallel())           # EP for experts (a2a)
 
 
 def main():
@@ -90,8 +84,11 @@ def main():
 
     results = {}
     for kind in ("1f1b", "interleaved_1f1b", "dualpipev"):
-        prog = compile_training(forward, params, inputs, schedule(kind),
-                                split_backward=(kind == "dualpipev"))
+        # split_backward (ZeroBubble Bi/Bw) derives from the Pipeline
+        # fragment's kind; the Strategy is also JSON-serializable:
+        # strategy(kind).to_json() round-trips byte-stably
+        prog = compile_training(forward, params, inputs,
+                                strategy=strategy(kind))
         res = Interpreter(prog).run({"x": x, "y": y})
         assert abs(res.loss - l_ref) < 1e-6, (kind, res.loss, l_ref)
         sim = TimelineSimulator(

@@ -1,4 +1,6 @@
-"""Paper §6.2 (Table 1 / Fig 8): composing PP with every ZeRO level.
+"""Paper §6.2 (Table 1 / Fig 8): composing PP with every ZeRO level —
+each cell is a ``Strategy(Mesh(pp, dp), Pipeline(...) | ZeRO(stage))``
+compiled through the Strategy front door (see benchmarks/common.py).
 Frameworks that don't reshard between microbatches keep full param/grad
 buffers alive; Piper's IR frees them after the last consumer, so peak
 memory tracks the shard size and much larger batches fit.

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Examples smoke loop (CI job `examples-smoke`): runs the runnable
+# examples that exercise the public Strategy API end-to-end, so an API
+# regression in the examples fails CI even when unit tests still pass.
+# Each example gets the same hard wall-clock cap as the tier-1 loop.
+#
+# Usage: scripts/examples_smoke.sh
+#   EXAMPLES_TIMEOUT=300  per-example cap in seconds (default 300)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+CAP="${EXAMPLES_TIMEOUT:-300}"
+
+echo "== examples/quickstart.py (Strategy JSON -> train --strategy) =="
+timeout "$CAP" python examples/quickstart.py
+
+echo "== examples/autotune.py --fast (search -> strategy round-trip) =="
+timeout "$CAP" python examples/autotune.py --fast
+
+echo "== examples/dualpipe_moe.py (DualPipeV x EP strategy) =="
+timeout "$CAP" python examples/dualpipe_moe.py
+
+echo "examples smoke: OK"

@@ -1,0 +1,22 @@
+"""Piper reproduction on JAX — public package surface.
+
+The declarative Strategy API is the front door for distributed training
+plans; everything else (IR, runtime, tuner) is reachable through the
+subpackages:
+
+    from repro import Mesh, Pipeline, Strategy, ZeRO, compile_training
+
+    strat = Strategy(Mesh(pp=4, dp=2),
+                     Pipeline("1f1b", n_mb=8) | ZeRO(stage=3))
+    prog = compile_training(forward, params, inputs, strategy=strat)
+"""
+from .core import compile_training
+from .core.strategy import (SCHEMA_VERSION, ExpertParallel, Mesh, Overlap,
+                            Pipeline, RawDirectives, Strategy,
+                            StrategyError, ZeRO)
+
+__all__ = [
+    "ExpertParallel", "Mesh", "Overlap", "Pipeline", "RawDirectives",
+    "SCHEMA_VERSION", "Strategy", "StrategyError", "ZeRO",
+    "compile_training",
+]

@@ -1,4 +1,4 @@
-"""Piper core: IR, directives, compiler, centralized scheduler."""
+"""Piper core: IR, directives, Strategy API, compiler, scheduler."""
 from .compiler import CompiledProgram, compile_training
 from .dag import Bucket, Edge, Node, TrainingDAG, ValueSpec
 from .directives import Order, Place, Replicate, Shard, Split
@@ -6,12 +6,17 @@ from .filters import F
 from .overlap import OverlapConfig, apply_overlap
 from .plan import DevicePlan, GlobalPlan, ScheduleRejected, Task
 from .scheduler import build_plan, validate_comm_order
+from .strategy import (SCHEMA_VERSION, ExpertParallel, Mesh, Overlap,
+                       Pipeline, RawDirectives, Strategy, StrategyError,
+                       ZeRO)
 from .trace import Recorder, TracedValue
 
 __all__ = [
-    "Bucket", "CompiledProgram", "DevicePlan", "Edge", "F", "GlobalPlan",
-    "Node", "Order", "OverlapConfig", "Place", "Recorder", "Replicate",
-    "ScheduleRejected", "Shard", "Split", "Task", "TracedValue",
-    "TrainingDAG", "ValueSpec", "apply_overlap", "build_plan",
+    "Bucket", "CompiledProgram", "DevicePlan", "Edge", "ExpertParallel",
+    "F", "GlobalPlan", "Mesh", "Node", "Order", "Overlap",
+    "OverlapConfig", "Pipeline", "Place", "RawDirectives", "Recorder",
+    "Replicate", "SCHEMA_VERSION", "ScheduleRejected", "Shard", "Split",
+    "Strategy", "StrategyError", "Task", "TracedValue", "TrainingDAG",
+    "ValueSpec", "ZeRO", "apply_overlap", "build_plan",
     "compile_training", "validate_comm_order",
 ]

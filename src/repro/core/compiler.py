@@ -1,13 +1,16 @@
-"""The Piper compiler (paper §4.2): annotated model + schedule -> plans.
+"""The Piper compiler (paper §4.2): annotated model + strategy -> plans.
 
 Phase 1: trace the annotated model into a single-device DAG of forward
 Chunks and build per-chunk backward Chunks.
-Phase 2: apply the user's scheduling directives in order, then run the
-finalization passes (p2p insertion, all-gather elision, reduce merging,
-stream defaults) and hand the DAG to the centralized scheduler.
+Phase 2: lower the user's ``Strategy`` to scheduling directives (or take
+a legacy hand-assembled directive list), apply them in order, then run
+the finalization passes (p2p insertion, all-gather elision, reduce
+merging, stream defaults, optional overlap engine) and hand the DAG to
+the centralized scheduler.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -17,6 +20,7 @@ from .dag import TrainingDAG
 from .directives import Directive
 from .plan import GlobalPlan
 from .scheduler import build_plan
+from .strategy import RawDirectives, Strategy
 from .trace import Recorder
 
 
@@ -26,6 +30,7 @@ class CompiledProgram:
     plan: GlobalPlan
     params: dict[str, Any]
     schedule: Sequence[Directive]
+    strategy: Optional[Strategy] = None
     stats: dict[str, Any] = field(default_factory=dict)
 
 
@@ -37,15 +42,38 @@ def compile_training(
     build_bwd: bool = True,
     split_backward: bool = False,
     overlap=None,
+    strategy: Optional[Strategy] = None,
 ) -> CompiledProgram:
     """``forward(rec, tvs)`` builds the model using ``rec.annotate`` /
-    ``rec.region`` and returns the loss TracedValue.  ``inputs`` maps graph
-    input name -> (shape, dtype).  ``split_backward`` emits ZeroBubble
-    Bi/Bw chunk pairs (needed by dualpipev schedules).  ``overlap`` is an
-    optional ``overlap.OverlapConfig``: when given, the joint
-    compute–communication overlap engine (collective bucketing, lookahead
-    gather prefetch, bubble-aware scheduling) runs as the tail of the
-    finalization pass layer."""
+    ``rec.region`` and returns the loss TracedValue.  ``inputs`` maps
+    graph input name -> (shape, dtype).
+
+    ``strategy`` is the front door: a ``core.strategy.Strategy`` whose
+    fragments lower to the directive list in canonical order and also
+    derive ``split_backward`` (from the Pipeline fragment) and the
+    overlap-engine config (from the Overlap fragment).
+
+    ``schedule`` / ``split_backward`` / ``overlap`` are the deprecated
+    directive-list spelling; a non-empty ``schedule`` is wrapped into a
+    ``RawDirectives`` fragment so both paths share one pipeline.  The
+    two spellings are mutually exclusive."""
+    if strategy is not None:
+        if schedule or split_backward or overlap is not None:
+            raise ValueError(
+                "pass either strategy= or the legacy schedule=/"
+                "split_backward=/overlap= arguments, not both")
+        strategy.validate()
+        split_backward = strategy.split_backward
+        overlap = strategy.overlap_config()
+    else:
+        if schedule:
+            warnings.warn(
+                "compile_training(schedule=...) is deprecated: declare "
+                "a core.strategy.Strategy and pass strategy= instead",
+                DeprecationWarning, stacklevel=2)
+        strategy = Strategy(
+            mesh=None, fragments=(RawDirectives(tuple(schedule)),))
+
     rec = Recorder(params)
     tvs = {name: rec.input(name, shape, dtype)
            for name, (shape, dtype) in inputs.items()}
@@ -55,13 +83,14 @@ def compile_training(
     if build_bwd:
         build_backward(dag, split_backward=split_backward)
 
-    for directive in schedule:
+    directives = strategy.lower(dag=dag)
+    for directive in directives:
         directive.apply(dag)
 
     passes.run_all(dag, overlap=overlap)
     plan = build_plan(dag)
     prog = CompiledProgram(dag=dag, plan=plan, params=params,
-                           schedule=tuple(schedule))
+                           schedule=tuple(directives), strategy=strategy)
     prog.stats = {**dag.stats(),
                   "devices": len(plan.devices),
                   "elided_allgathers": dag.meta.get("elided_allgathers", 0),

@@ -19,7 +19,8 @@ from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence, Union
 
 from .dag import (PASS_B, PASS_BW, PASS_F, Node, TrainingDAG, ValueSpec)
-from .filters import F, as_filter, select_union, sinks_within, sources_within
+from .filters import (F, as_filter, no_match_report, select_union,
+                      sinks_within, sources_within)
 
 FilterLike = Union[F, dict]
 
@@ -44,7 +45,9 @@ class Place(Directive):
                    else [self.filters])
         matched = select_union(dag, [as_filter(f) for f in filters])
         if not matched:
-            raise ValueError(f"Place matched no nodes: {self.filters}")
+            raise ValueError(
+                f"Place({self.filters}) "
+                + no_match_report(dag, list(filters)))
         for nid in matched:
             node = dag.nodes[nid]
             node.devices = tuple(self.devices)
@@ -75,7 +78,9 @@ class Replicate(Directive):
         f = as_filter(self.filter)
         matched = [nid for nid in f.select(dag) if dag.nodes[nid].is_chunk]
         if not matched:
-            raise ValueError(f"Replicate matched no chunks: {self.filter}")
+            raise ValueError(
+                f"Replicate({self.filter}) "
+                + no_match_report(dag, self.filter, what="chunks"))
         devices = tuple(self.devices)
         touched_buckets: set[str] = set()
         for nid in matched:
@@ -158,7 +163,9 @@ class Shard(Directive):
         f = as_filter(self.filter)
         matched = [nid for nid in f.select(dag) if dag.nodes[nid].is_chunk]
         if not matched:
-            raise ValueError(f"Shard matched no chunks: {self.filter}")
+            raise ValueError(
+                f"Shard({self.filter}) "
+                + no_match_report(dag, self.filter, what="chunks"))
         devices = tuple(self.devices)
         for nid in matched:
             node = dag.nodes[nid]
@@ -205,10 +212,24 @@ class Split(Directive):
         f = as_filter(self.filter)
         matched = set(f.select(dag))
         if not matched:
-            raise ValueError(f"Split matched no nodes: {self.filter}")
+            raise ValueError(
+                f"Split({self.filter}) " + no_match_report(dag, self.filter))
         k = self.num_microbatches
         if k <= 1:
             return
+        # Order-before-Split footgun (the documented one): overlap groups
+        # record node-id sets, so cloning their members would silently
+        # leave every mb>0 copy un-grouped.  Fail loudly instead.
+        stale = {nid for groups in dag.overlap_groups
+                 for members in groups for nid in members} & matched
+        if stale:
+            names = ", ".join(dag.nodes[nid].short()
+                              for nid in sorted(stale)[:3])
+            raise ValueError(
+                "Split would clone nodes already referenced by an "
+                "Order overlap group (e.g. " + names + "); issue Order "
+                "after Split (paper Listing 2) so the groups see the "
+                "per-microbatch clones")
         # check contiguity: boundary input edges must come from graph inputs
         for e in dag.edges:
             if e.dst in matched and e.src not in matched:
@@ -319,8 +340,8 @@ class Split(Directive):
                     new_sinks.append((nid, slot))
             dag.grad_sinks[bucket] = new_sinks
 
-        # overlap groups referencing split nodes: rewrite is not supported;
-        # Order should be issued after Split (as in the paper's Listing 2).
+        # overlap groups referencing split nodes are rejected at the top
+        # of apply(); Order must be issued after Split (paper Listing 2).
 
     def _split_spec(self, spec: ValueSpec) -> ValueSpec:
         if not spec.shape:
@@ -359,16 +380,23 @@ class Order(Directive):
         for item in self.filter_list:
             if isinstance(item, (list, tuple)):
                 members = [self._select(dag, f) for f in item]
-                for m in members:
+                for f, m in zip(item, members):
                     if not m:
-                        raise ValueError(f"Order filter matched nothing: "
-                                         f"{item}")
+                        raise ValueError(
+                            f"Order({f}) "
+                            + no_match_report(dag, f, what="chunk nodes"
+                                              if self.chunks_only
+                                              else "nodes"))
                 overlap_records.append(tuple(frozenset(m) for m in members))
                 groups.append(set().union(*members))
             else:
                 sel = self._select(dag, item)
                 if not sel:
-                    raise ValueError(f"Order filter matched nothing: {item}")
+                    raise ValueError(
+                        f"Order({item}) "
+                        + no_match_report(dag, item, what="chunk nodes"
+                                          if self.chunks_only
+                                          else "nodes"))
                 groups.append(sel)
         for a, b in zip(groups, groups[1:]):
             for u in sinks_within(dag, a - b):

@@ -65,6 +65,44 @@ def select_union(dag: TrainingDAG, filters: Iterable[F]) -> list[int]:
     return out
 
 
+def no_match_report(dag: TrainingDAG, filters, what: str = "nodes") -> str:
+    """Actionable diagnostic for a filter that selected nothing: the dim
+    names (with their value sets) that actually exist in the DAG, plus
+    the nearest-matching nodes — the ones satisfying the most filter
+    constraints — so a typo'd dim name or off-by-one stage index is
+    visible in the error itself."""
+    if isinstance(filters, (F, dict)):
+        filters = [filters]
+    filters = [as_filter(f) for f in filters]
+    dims: dict[str, set] = {}
+    for node in dag.nodes.values():
+        for k, v in node.dims.items():
+            dims.setdefault(k, set()).add(v)
+    dim_desc = ", ".join(
+        f"{k}∈{{{', '.join(str(v) for v in sorted(vals, key=str)[:8])}}}"
+        for k, vals in sorted(dims.items())) or "<none>"
+
+    def satisfied(f: F, node: Node) -> int:
+        n = 0
+        for dim, val in f.spec.items():
+            has = dim in node.dims
+            if val == MATCH_NONE:
+                n += not has
+            elif val == MATCH_ALL:
+                n += has
+            else:
+                n += has and node.dims[dim] == val
+        return n
+
+    def score(node: Node) -> int:
+        return max((satisfied(f, node) for f in filters), default=0)
+
+    ranked = sorted(dag.nodes.values(), key=lambda n: (-score(n), n.id))
+    nearest = ", ".join(n.short() for n in ranked[:3]) or "<empty DAG>"
+    return (f"matched no {what}.  Available dims: {dim_desc}.  "
+            f"Nearest nodes: {nearest}")
+
+
 def sources_within(dag: TrainingDAG, sub: set[int]) -> list[int]:
     """Nodes in ``sub`` with no predecessor inside ``sub``."""
     return [nid for nid in sub if not (dag.preds(nid) & sub)]

@@ -235,6 +235,10 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
     ap.add_argument("--zero", type=int, default=3)
+    ap.add_argument("--strategy", default=None, metavar="JSON",
+                    help="Strategy JSON document; its ZeRO fragment "
+                    "overrides --zero for the SPMD lowering and the "
+                    "document is recorded in the cell result")
     ap.add_argument("--attn-mode", default="cp", choices=["cp", "tp"])
     ap.add_argument("--seq-axis", default="model",
                     choices=["model", "none"])
@@ -247,6 +251,20 @@ def main(argv=None) -> int:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--no-probe", action="store_true")
     args = ap.parse_args(argv)
+
+    strategy_doc = None
+    if args.strategy:
+        from repro.core.strategy import Strategy, StrategyError
+        try:
+            strat = Strategy.from_json(
+                pathlib.Path(args.strategy).read_text())
+        except (StrategyError, OSError) as e:
+            print(f"strategy: {e}")
+            return 2
+        if strat.zero is not None:
+            args.zero = strat.zero.stage
+        strategy_doc = strat.to_dict()
+        print(f"strategy: {strat.label()} -> zero_stage={args.zero}")
 
     cells = []
     if args.all:
@@ -278,6 +296,8 @@ def main(argv=None) -> int:
             res = run_cell(arch, shape, mesh, zero_stage=args.zero,
                            strategy_kw=strategy_kw, cfg_kw=cfg_kw,
                            probe=not args.no_probe)
+            if strategy_doc is not None:
+                res["strategy_doc"] = strategy_doc
             if args.tag:
                 res["tag"] = args.tag
             p = save(res)

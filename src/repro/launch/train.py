@@ -57,6 +57,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--resume", action="store_true")
+    # declarative Strategy API (repro.core.strategy): replay a saved
+    # strategy JSON — validate it, compile the full config's proxy
+    # program through compile_training(strategy=...), and report the
+    # simulator-predicted step time / peak memory before training
+    ap.add_argument("--strategy", default=None, metavar="JSON",
+                    help="path to a Strategy JSON document "
+                    "(e.g. the strategy.json --autotune saves)")
     # strategy autotuner (repro.tune): pick PP schedule / microbatches /
     # ZeRO / EP for the FULL config before training the reduced one
     ap.add_argument("--autotune", action="store_true",
@@ -72,6 +79,26 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     base = get_config(args.arch)
+
+    if args.strategy:
+        from repro import tune
+        from repro.core.strategy import Strategy, StrategyError
+        tokens = args.tune_tokens or tune.DEFAULT_TOKENS
+        try:
+            strat = Strategy.from_json(
+                pathlib.Path(args.strategy).read_text())
+            prog, sm = tune.build_strategy_program(base, strat, tokens)
+        except (StrategyError, ValueError, OSError) as e:
+            print(f"strategy: {e}")
+            return 2
+        score = tune.score_strategy(base, strat, tokens=tokens,
+                                    program=(prog, sm))
+        print(f"strategy[{base.name}] {strat.label()}  "
+              f"step={score.step_seconds*1e3:.2f}ms  "
+              f"peak={score.peak_bytes/2**30:.2f}GiB  "
+              f"({prog.stats['chunks']} chunks, "
+              f"{prog.stats['comms']} comms, "
+              f"{prog.stats['devices']} devices)")
 
     if args.autotune:
         from repro import tune
@@ -91,8 +118,11 @@ def main(argv=None):
         plan_path.parent.mkdir(parents=True, exist_ok=True)
         import json
         plan_path.write_text(json.dumps(plan.to_dict(), indent=1))
+        strat_path = plan_path.with_name("strategy.json")
+        strat_path.write_text(plan.strategy().to_json())
         print(f"plan saved to {plan_path} "
-              f"({len(plan.directives())} directives)")
+              f"({len(plan.directives())} directives); winning strategy "
+              f"saved to {strat_path} (replay with --strategy)")
     cfg = base.reduced(n_layers=args.layers, d_model=args.d_model,
                        d_ff=args.d_model * 4, vocab=args.vocab,
                        n_heads=max(4, args.d_model // 64))

@@ -14,10 +14,11 @@ simulator + cost model, reject over-budget candidates, cache the winner.
     directives = plan.directives()   # feed to compile_training
 """
 from .cache import PlanCache, fingerprint
-from .proxy import (build_candidate_program, candidate_directives,
-                    decompose, make_chunk_cost)
+from .proxy import (build_candidate_program, build_strategy_program,
+                    candidate_directives, candidate_strategy, decompose,
+                    make_chunk_cost)
 from .search import (DEFAULT_TOKENS, NoFeasiblePlanError, Plan, Score,
-                     score_candidate, search)
+                     score_candidate, score_strategy, search)
 from .space import (SCHEDULE_KINDS, Candidate, MeshSpec, SearchSpace,
                     baseline_candidate)
 
@@ -25,6 +26,7 @@ __all__ = [
     "SCHEDULE_KINDS", "DEFAULT_TOKENS", "Candidate", "MeshSpec",
     "NoFeasiblePlanError", "Plan", "PlanCache", "Score", "SearchSpace",
     "baseline_candidate", "build_candidate_program",
-    "candidate_directives", "decompose", "fingerprint", "make_chunk_cost",
-    "score_candidate", "search",
+    "build_strategy_program", "candidate_directives",
+    "candidate_strategy", "decompose", "fingerprint", "make_chunk_cost",
+    "score_candidate", "score_strategy", "search",
 ]

@@ -1,26 +1,38 @@
 """JSON plan cache: repeated ``tune.search`` launches skip the sweep.
 
 Keyed by a fingerprint of everything that determines the result —
-config fields, mesh, memory budget, token count, search space, and the
-cost-model constants — so a stale plan can never be served for changed
-inputs.  One file per key under the cache directory (default
-``~/.cache/repro-tune``, override with ``$REPRO_TUNE_CACHE`` or the
-``cache_dir`` argument).
+config fields, the canonical mesh/strategy-space JSON, memory budget,
+token count, and the cost-model constants — so a stale plan can never
+be served for changed inputs.  One file per key under the cache
+directory (default ``~/.cache/repro-tune``, override with
+``$REPRO_TUNE_CACHE`` or the ``cache_dir`` argument).
 
-``CACHE_VERSION`` is part of the fingerprint AND checked on read: bump
-it whenever the *scoring semantics* change (proxy decomposition, chunk
-cost formula, peak-memory estimator rules), since those are not visible
-in the fingerprinted inputs but invalidate every stored prediction."""
+Stored entries carry strategies (``core.strategy`` JSON documents), not
+candidate field tuples.  Two version gates apply:
+
+- ``CACHE_VERSION`` — part of the fingerprint AND checked on read: bump
+  it whenever the *scoring semantics* change (proxy decomposition,
+  chunk cost formula, peak-memory estimator rules), since those are not
+  visible in the fingerprinted inputs but invalidate every prediction.
+- ``strategy.SCHEMA_VERSION`` — also fingerprinted and checked on read:
+  an entry written under a different strategy schema is ignored with a
+  logged warning (its stored plan would not deserialize faithfully).
+"""
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import pathlib
 from typing import Any, Optional
 
-CACHE_VERSION = 2  # v2: ZeRO-3/p2p accounting fix in timeline_peak_bytes
+from ..core.strategy import SCHEMA_VERSION as STRATEGY_SCHEMA_VERSION
+
+log = logging.getLogger(__name__)
+
+CACHE_VERSION = 3  # v3: entries store Strategy JSON, not Candidate tuples
 
 
 def _jsonable(obj: Any) -> Any:
@@ -36,7 +48,9 @@ def _jsonable(obj: Any) -> Any:
 
 
 def fingerprint(**parts: Any) -> str:
-    blob = json.dumps({"version": CACHE_VERSION, **_jsonable(parts)},
+    blob = json.dumps({"version": CACHE_VERSION,
+                       "strategy_schema": STRATEGY_SCHEMA_VERSION,
+                       **_jsonable(parts)},
                       sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
@@ -61,14 +75,22 @@ class PlanCache:
             return None
         if data.get("cache_version") != CACHE_VERSION:
             return None
+        if data.get("strategy_schema") != STRATEGY_SCHEMA_VERSION:
+            log.warning(
+                "ignoring stale plan-cache entry %s: strategy schema %r "
+                "!= current %r (re-searching)", p.name,
+                data.get("strategy_schema"), STRATEGY_SCHEMA_VERSION)
+            return None
         return data
 
     def put(self, key: str, value: dict) -> pathlib.Path:
         self.dir.mkdir(parents=True, exist_ok=True)
         p = self._path(key)
         tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"cache_version": CACHE_VERSION,
-                                   **value}, indent=1, sort_keys=True))
+        tmp.write_text(json.dumps(
+            {"cache_version": CACHE_VERSION,
+             "strategy_schema": STRATEGY_SCHEMA_VERSION,
+             **value}, indent=1, sort_keys=True))
         tmp.replace(p)
         return p
 

@@ -29,9 +29,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from ..core import F, OverlapConfig, Replicate, Shard, compile_training
-from ..core.schedules import (build_rank_sequences, emit_directives,
-                              rank_of_stage)
+from ..core import OverlapConfig, compile_training
+from ..core.strategy import Overlap, Strategy
 from ..models.model import params_count
 from ..runtime.costmodel import CostModel
 from .space import Candidate, MeshSpec
@@ -154,39 +153,26 @@ def make_proxy_forward(sm: StageModel):
 
 
 # ---------------------------------------------------------------------------
-# directives + compile
+# strategy + compile
 # ---------------------------------------------------------------------------
+
+def candidate_strategy(cfg, mesh: MeshSpec, cand: Candidate) -> Strategy:
+    """The declarative Strategy a candidate denotes (the serialized /
+    cached artifact).  ``cfg`` is accepted for signature symmetry —
+    expert placement is derived from the traced proxy DAG at compile
+    time, not from the config here."""
+    return cand.to_strategy(mesh)
+
 
 def candidate_directives(cfg, mesh: MeshSpec, cand: Candidate,
                          sm: StageModel) -> list:
     """The full directive list (Place/Replicate/Shard/Split/Order) a
-    candidate compiles to — this is what a winning ``Plan`` emits."""
-    S = sm.n_stages
-    groups = mesh.device_groups()
-    seqs = build_rank_sequences(cand.kind, mesh.pp, cand.n_mb, S)
-    sched = emit_directives(cand.kind, seqs, device_groups=groups,
-                            n_stages=S)
-    extra = []
-    for s in range(S):
-        g = groups[rank_of_stage(cand.kind, s, mesh.pp, S)]
-        if mesh.dp > 1:
-            extra.append(Replicate(
-                F(pp=s, ep="-"), devices=g,
-                reduce_stream="dp", gather_stream="ag",
-                shard_grads=cand.zero >= 2, shard_params=cand.zero >= 3))
-        if sm.expert_resident[s]:
-            if cand.ep > 1:
-                extra.append(Shard(F(pp=s, ep="*"), devices=g,
-                                   stream="ep"))
-            elif mesh.dp > 1:
-                extra.append(Replicate(
-                    F(pp=s, ep="*"), devices=g,
-                    reduce_stream="dp", gather_stream="ag",
-                    shard_grads=cand.zero >= 2,
-                    shard_params=cand.zero >= 3))
-    # Places, then Replicate/Shard, then Split + Orders (directives are
-    # order-sensitive: placement before Split so comms clone per-mb)
-    return sched[:S] + extra + sched[S:]
+    candidate compiles to — ``candidate_strategy`` lowered with the
+    expert stages the config decomposition places."""
+    expert_stages = {s for s in range(sm.n_stages)
+                     if sm.expert_resident[s]}
+    return candidate_strategy(cfg, mesh, cand).lower(
+        expert_stages=expert_stages)
 
 
 def candidate_overlap(cand: Candidate):
@@ -201,24 +187,36 @@ def candidate_overlap(cand: Candidate):
 _UNSET = object()
 
 
-def build_candidate_program(cfg, mesh: MeshSpec, cand: Candidate,
-                            tokens: int, overlap=_UNSET):
-    """Compile the proxy program for one candidate.  Returns
-    (CompiledProgram, StageModel).  ``overlap`` overrides the
-    candidate's own overlap axes (used by bench_overlap's explicit
-    on/off comparison)."""
-    sm = decompose(cfg, mesh.n_stages)
+def build_strategy_program(cfg, strategy: Strategy, tokens: int):
+    """Compile the stage-granular proxy program for a declarative
+    ``Strategy`` (the ``--strategy strategy.json`` replay path).
+    Returns (CompiledProgram, StageModel)."""
+    strategy.validate()
+    pipe = strategy.pipeline
+    if pipe is None:
+        raise ValueError("strategy has no Pipeline fragment; the proxy "
+                         "decomposition needs a stage count")
+    sm = decompose(cfg, pipe.stages(strategy.mesh))
     params = make_proxy_params(sm)
     fwd = make_proxy_forward(sm)
-    sched = candidate_directives(cfg, mesh, cand, sm)
     inputs = {"x": ((tokens, sm.d_model), PROXY_DTYPE),
               "y": ((tokens, sm.d_model), PROXY_DTYPE)}
-    prog = compile_training(
-        fwd, params, inputs, sched,
-        split_backward=cand.kind in ("dualpipev", "zb1f1b"),
-        overlap=(candidate_overlap(cand) if overlap is _UNSET
-                 else overlap))
+    prog = compile_training(fwd, params, inputs, strategy=strategy)
     return prog, sm
+
+
+def build_candidate_program(cfg, mesh: MeshSpec, cand: Candidate,
+                            tokens: int, overlap=_UNSET):
+    """Compile the proxy program for one candidate through the Strategy
+    front door.  Returns (CompiledProgram, StageModel).  ``overlap``
+    overrides the candidate's own overlap axes with an explicit
+    ``OverlapConfig`` or None (used by bench_overlap's on/off/legacy
+    comparison)."""
+    strat = candidate_strategy(cfg, mesh, cand)
+    if overlap is not _UNSET:
+        strat = (strat.without(Overlap) if overlap is None
+                 else strat.replacing(Overlap.from_config(overlap)))
+    return build_strategy_program(cfg, strat, tokens)
 
 
 # ---------------------------------------------------------------------------

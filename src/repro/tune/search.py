@@ -13,12 +13,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from ..core.strategy import Strategy
 from ..runtime.costmodel import CostModel
 from ..runtime.memory import timeline_peak_bytes
 from ..runtime.simulator import TimelineSimulator
 from .cache import PlanCache, fingerprint
-from .proxy import (build_candidate_program, candidate_directives,
-                    decompose, make_chunk_cost)
+from .proxy import (build_candidate_program, build_strategy_program,
+                    candidate_directives, decompose, make_chunk_cost)
 from .space import Candidate, MeshSpec, SearchSpace, baseline_candidate
 
 # default global batch: 128k tokens per step (divisible by every mb/dp
@@ -37,15 +38,26 @@ class Score:
     peak_bytes: int            # max over devices, estimated
     feasible: bool
 
-    def to_dict(self) -> dict:
-        return {"candidate": self.candidate.to_dict(),
+    def to_dict(self, mesh: Optional[MeshSpec] = None) -> dict:
+        """With ``mesh``, serialize the candidate as its canonical
+        Strategy document (what the plan cache stores); without, fall
+        back to the bare candidate axes."""
+        cand = (self.candidate.to_strategy(mesh).to_dict() if mesh
+                else self.candidate.to_dict())
+        key = "strategy" if mesh else "candidate"
+        return {key: cand,
                 "step_seconds": self.step_seconds,
                 "peak_bytes": self.peak_bytes,
                 "feasible": self.feasible}
 
     @staticmethod
     def from_dict(d: dict) -> "Score":
-        return Score(candidate=Candidate.from_dict(d["candidate"]),
+        if "strategy" in d:
+            cand = Candidate.from_strategy(
+                Strategy.from_dict(d["strategy"]))
+        else:
+            cand = Candidate.from_dict(d["candidate"])
+        return Score(candidate=cand,
                      step_seconds=float(d["step_seconds"]),
                      peak_bytes=int(d["peak_bytes"]),
                      feasible=bool(d["feasible"]))
@@ -72,13 +84,19 @@ class Plan:
     def speedup_vs_baseline(self) -> float:
         return self.baseline.step_seconds / self.predicted_step_seconds
 
+    def strategy(self) -> Strategy:
+        """The winning strategy as a declarative, serializable
+        ``core.strategy.Strategy`` — feed it straight to
+        ``compile_training(strategy=...)`` or write ``.to_json()`` to a
+        file for ``launch/train.py --strategy``."""
+        return self.candidate.to_strategy(self.mesh)
+
     def directives(self, config=None) -> list:
         """Re-emit the winning Piper directive list (Place/Replicate/
-        Shard/Split/Order) — deterministic given the candidate.  The
-        candidate's overlap axes are NOT directives: pass
-        ``proxy.candidate_overlap(plan.candidate)`` as
-        ``compile_training(..., overlap=...)`` to re-apply the overlap
-        engine the winner was scored with."""
+        Shard/Split/Order) — the winning ``strategy()`` lowered against
+        the config's stage decomposition.  The Overlap fragment is NOT
+        directives; prefer ``compile_training(strategy=
+        plan.strategy())`` which applies both."""
         cfg = config if config is not None else self._config
         if cfg is None:
             raise ValueError("pass the ArchConfig to rebuild directives "
@@ -105,14 +123,15 @@ class Plan:
     def to_dict(self) -> dict:
         return {
             "config_name": self.config_name,
-            "mesh": {"pp": self.mesh.pp, "dp": self.mesh.dp},
+            "mesh": self.mesh.mesh().to_dict(),
             "tokens": self.tokens,
             "budget_bytes": self.budget_bytes,
-            "candidate": self.candidate.to_dict(),
+            "strategy": self.strategy().to_dict(),
             "predicted_step_seconds": self.predicted_step_seconds,
             "predicted_peak_bytes": self.predicted_peak_bytes,
-            "baseline": self.baseline.to_dict(),
-            "leaderboard": [s.to_dict() for s in self.leaderboard],
+            "baseline": self.baseline.to_dict(self.mesh),
+            "leaderboard": [s.to_dict(self.mesh)
+                            for s in self.leaderboard],
             "n_evaluated": self.n_evaluated,
             "n_rejected": self.n_rejected,
         }
@@ -120,13 +139,24 @@ class Plan:
     @staticmethod
     def from_dict(d: dict, *, from_cache: bool = False,
                   config=None) -> "Plan":
+        if "mesh" in d and "axes" in d["mesh"]:
+            from ..core.strategy import Mesh
+            mesh = MeshSpec.from_mesh(Mesh.from_dict(d["mesh"]))
+        else:   # pre-schema dicts (not served from cache: version-gated)
+            mesh = MeshSpec(pp=int(d["mesh"]["pp"]),
+                            dp=int(d["mesh"]["dp"]))
+        if "strategy" in d:
+            cand = Candidate.from_strategy(Strategy.from_dict(
+                d["strategy"]))
+        else:
+            cand = Candidate.from_dict(d["candidate"])
         return Plan(
             config_name=d["config_name"],
-            mesh=MeshSpec(pp=int(d["mesh"]["pp"]), dp=int(d["mesh"]["dp"])),
+            mesh=mesh,
             tokens=int(d["tokens"]),
             budget_bytes=(int(d["budget_bytes"])
                           if d.get("budget_bytes") is not None else None),
-            candidate=Candidate.from_dict(d["candidate"]),
+            candidate=cand,
             predicted_step_seconds=float(d["predicted_step_seconds"]),
             predicted_peak_bytes=int(d["predicted_peak_bytes"]),
             baseline=Score.from_dict(d["baseline"]),
@@ -165,6 +195,30 @@ def score_candidate(config, mesh: MeshSpec, cand: Candidate, *,
                  peak_bytes=peak, feasible=feasible)
 
 
+def score_strategy(config, strategy: Strategy, *,
+                   tokens: int = DEFAULT_TOKENS,
+                   budget_bytes: Optional[int] = None,
+                   cost: Optional[CostModel] = None,
+                   program=None) -> Score:
+    """Score a declarative ``Strategy`` (e.g. one replayed from JSON by
+    ``launch/train.py --strategy``) on the timeline simulator with the
+    analytic chunk roofline.  ``program`` takes an already-compiled
+    ``(CompiledProgram, StageModel)`` pair to avoid recompiling when the
+    caller also needs the program."""
+    cost = cost or CostModel()
+    prog, sm = (program if program is not None
+                else build_strategy_program(config, strategy, tokens))
+    pipe = strategy.pipeline
+    override = make_chunk_cost(sm, tokens, pipe.n_mb, cost)
+    res = TimelineSimulator(prog, cost,
+                            chunk_seconds_override=override).run()
+    peaks = timeline_peak_bytes(prog, res.records)
+    peak = max(peaks.values())
+    return Score(candidate=Candidate.from_strategy(strategy),
+                 step_seconds=res.makespan, peak_bytes=peak,
+                 feasible=budget_bytes is None or peak <= budget_bytes)
+
+
 # ---------------------------------------------------------------------------
 # search
 # ---------------------------------------------------------------------------
@@ -192,8 +246,11 @@ def search(config, mesh: MeshSpec, budget: Optional[float] = None, *,
     budget_bytes = int(budget) if budget is not None else None
 
     cache = PlanCache(cache_dir) if use_cache else None
-    key = fingerprint(config=config, mesh=mesh, budget=budget_bytes,
-                      tokens=tokens, space=space.to_dict(), cost=cost)
+    # keyed on the canonical strategy-layer JSON forms (mesh axes doc,
+    # space dict), never on Candidate field tuples
+    key = fingerprint(config=config, mesh=mesh.mesh().to_dict(),
+                      budget=budget_bytes, tokens=tokens,
+                      space=space.to_dict(), cost=cost)
     if cache is not None:
         hit = cache.get(key)
         if hit is not None:

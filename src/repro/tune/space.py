@@ -1,12 +1,13 @@
 """Search space for the strategy autotuner (DESIGN.md §8).
 
 A ``Candidate`` is one point in the strategy space Piper's directives
-span: a pipeline schedule kind (the five builders in
-``core/schedules.py``), a microbatch count, a ZeRO stage for the
-``Replicate`` directive, and an expert-parallel degree for MoE configs.
-``SearchSpace.candidates`` enumerates the feasible points for a given
-config + mesh in a deterministic order (the tuner's tie-break is "first
-enumerated wins", so this order is part of the plan-cache contract).
+span — and a *thin constructor over* ``core.strategy.Strategy``: the
+compiled artifact, the serialized plan, and the cache entry are all the
+Strategy that ``Candidate.to_strategy`` builds; the tuple form exists
+only so ``SearchSpace.candidates`` can enumerate the feasible points
+for a given config + mesh in a deterministic order (the tuner's
+tie-break is "first enumerated wins", so this order is part of the
+plan-cache contract).
 """
 from __future__ import annotations
 
@@ -14,17 +15,25 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
-SCHEDULE_KINDS = ("gpipe", "1f1b", "zb1f1b", "interleaved_1f1b",
-                  "dualpipev")
+from ..core.strategy import (SCHEDULE_KINDS, ExpertParallel, Mesh,
+                             Overlap, Pipeline, Strategy, StrategyError,
+                             ZeRO)
+
+__all__ = ["SCHEDULE_KINDS", "Candidate", "MeshSpec", "SearchSpace",
+           "baseline_candidate"]
 
 
 @dataclass(frozen=True)
 class MeshSpec:
     """Logical device mesh for the tuner: ``pp`` pipeline ranks, each
-    rank a group of ``dp`` data-parallel replicas (devices are numbered
-    rank-major, as in the schedule benches)."""
+    rank a group of ``dp`` data-parallel replicas.  A thin (pp, dp) view
+    over the named-axis ``core.strategy.Mesh`` — device numbering and
+    group derivation live there (rank-major)."""
     pp: int
     dp: int = 1
+
+    def mesh(self) -> Mesh:
+        return Mesh(pp=self.pp, dp=self.dp)
 
     @property
     def n_devices(self) -> int:
@@ -38,8 +47,17 @@ class MeshSpec:
         return 2 * self.pp
 
     def device_groups(self) -> list:
-        return [[r * self.dp + i for i in range(self.dp)]
-                for r in range(self.pp)]
+        return self.mesh().device_groups("pp")
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshSpec":
+        extra = [n for n in mesh.axis_names if n not in ("pp", "dp")]
+        if extra:
+            raise StrategyError(
+                f"the tuner's MeshSpec only models (pp, dp) meshes; "
+                f"{mesh!r} has extra axes {extra}")
+        return MeshSpec(pp=mesh.axis_size("pp", 1),
+                        dp=mesh.axis_size("dp", 1))
 
 
 @dataclass(frozen=True)
@@ -72,6 +90,42 @@ class Candidate:
                          zero=int(d.get("zero", 0)), ep=int(d.get("ep", 1)),
                          prefetch=int(d.get("prefetch", 0)),
                          bucket_mb=int(d.get("bucket_mb", 0)))
+
+    # -- the Strategy bridge: Candidate is a constructor over Strategy --
+    def to_strategy(self, mesh) -> Strategy:
+        """The declarative strategy this candidate denotes on ``mesh``
+        (a ``MeshSpec`` or named-axis ``Mesh``).  This is what the plan
+        cache stores and what ``compile_training(strategy=...)``
+        consumes — the candidate tuple is just its enumeration key."""
+        m = mesh.mesh() if isinstance(mesh, MeshSpec) else mesh
+        frags = [Pipeline(self.kind, n_mb=self.n_mb)]
+        if m.axis_size("dp", 1) > 1:
+            frags.append(ZeRO(stage=self.zero))
+        if self.ep > 1:
+            frags.append(ExpertParallel())
+        if self.prefetch > 0:
+            frags.append(Overlap(prefetch=self.prefetch,
+                                 bucket_mb=self.bucket_mb))
+        return Strategy(m, tuple(frags))
+
+    @staticmethod
+    def from_strategy(strategy: Strategy) -> "Candidate":
+        """Project a structured Strategy back onto the search-space
+        axes (the inverse of ``to_strategy`` for tuner-shaped
+        strategies)."""
+        pipe = strategy.pipeline
+        if pipe is None:
+            raise StrategyError(
+                "cannot derive a tuner Candidate from a strategy with "
+                "no Pipeline fragment")
+        zero, ep, ov = (strategy.zero, strategy.expert_parallel,
+                        strategy.overlap)
+        return Candidate(
+            kind=pipe.schedule, n_mb=pipe.n_mb,
+            zero=zero.stage if zero else 0,
+            ep=(ep.degree or strategy.mesh[ep.axis]) if ep else 1,
+            prefetch=ov.prefetch if ov and ov.enabled else 0,
+            bucket_mb=ov.bucket_mb if ov and ov.enabled else 0)
 
 
 @dataclass(frozen=True)

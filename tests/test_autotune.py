@@ -98,6 +98,53 @@ class TestPlanCache:
         assert back.baseline.step_seconds == plan.baseline.step_seconds
         assert repr(back.directives()) == repr(plan.directives())
 
+    def test_plan_dict_stores_strategies_not_candidate_tuples(self):
+        """The serialized plan (the cache payload) speaks the Strategy
+        dialect: winner/baseline/leaderboard are schema-versioned
+        strategy documents, not Candidate field tuples."""
+        from repro.core.strategy import SCHEMA_VERSION, Strategy
+        plan = small_search(mesh=tune.MeshSpec(pp=2, dp=2))
+        d = plan.to_dict()
+        assert "candidate" not in d
+        assert d["strategy"]["schema"] == SCHEMA_VERSION
+        assert d["mesh"] == {"axes": [["pp", 2], ["dp", 2]]}
+        for entry in [d["baseline"], *d["leaderboard"]]:
+            assert "candidate" not in entry
+            strat = Strategy.from_dict(entry["strategy"])
+            assert strat.pipeline is not None
+        # winner document == plan.strategy() canonical JSON
+        assert Strategy.from_dict(d["strategy"]) == plan.strategy()
+
+    def test_stale_strategy_schema_entry_ignored(self, tmp_path, caplog):
+        """A cache entry written under another strategy schema is
+        skipped with a logged warning and the search re-runs."""
+        import json
+        import logging
+        kw = dict(tokens=TOKENS, space=SPACE, cache_dir=str(tmp_path))
+        tune.search(get_config("qwen3-1b"), tune.MeshSpec(pp=2, dp=1),
+                    None, **kw)
+        entries = list(tmp_path.glob("*.json"))
+        assert entries
+        for p in entries:
+            doc = json.loads(p.read_text())
+            doc["strategy_schema"] = 0
+            p.write_text(json.dumps(doc))
+        with caplog.at_level(logging.WARNING, logger="repro.tune.cache"):
+            again = tune.search(get_config("qwen3-1b"),
+                                tune.MeshSpec(pp=2, dp=1), None, **kw)
+        assert not again.from_cache
+        assert any("strategy schema" in r.getMessage()
+                   for r in caplog.records)
+
+    def test_old_keys_invalidate_on_schema_bump(self, monkeypatch):
+        """Fingerprints derive from the strategy schema: bumping it
+        yields different cache keys for identical inputs."""
+        from repro.tune import cache as tc
+        k1 = tc.fingerprint(config="c", mesh={"axes": [["pp", 2]]})
+        monkeypatch.setattr(tc, "STRATEGY_SCHEMA_VERSION", -1)
+        k2 = tc.fingerprint(config="c", mesh={"axes": [["pp", 2]]})
+        assert k1 != k2
+
 
 class TestMemoryBudget:
     def test_budget_rejects_heavy_candidates(self):

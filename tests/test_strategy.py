@@ -1,0 +1,404 @@
+"""Strategy API (core/strategy.py): named-axis Mesh derivation, fragment
+composition/validation, byte-stable JSON round-trips with schema
+gating, and the acceptance bar — for every schedule kind the
+``compile_training(strategy=...)`` front door produces a GlobalPlan
+with per-device per-stream op sequences identical to the legacy
+``emit_directives`` + hand-assembled directive-list path."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ExpertParallel, F, Mesh, Order, Overlap,
+                        OverlapConfig, Pipeline, Place, RawDirectives,
+                        Replicate, Shard, Split, Strategy, StrategyError,
+                        ZeRO, compile_training)
+from repro.core.schedules import (build_rank_sequences, emit_directives,
+                                  rank_of_stage)
+from repro.tune.space import SCHEDULE_KINDS, Candidate, MeshSpec
+
+from helpers import (inputs_spec, make_batch, make_mlp_params,
+                     make_moe_forward, mlp_oracle)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Mesh
+# ---------------------------------------------------------------------------
+
+class TestMesh:
+    def test_rank_major_groups_match_meshspec(self):
+        for pp, dp in ((2, 1), (2, 2), (4, 2), (3, 4)):
+            mesh = Mesh(pp=pp, dp=dp)
+            assert mesh.device_groups("pp") == \
+                MeshSpec(pp=pp, dp=dp).device_groups()
+            assert mesh.n_devices == pp * dp
+
+    def test_groups_along_inner_axis(self):
+        assert Mesh(pp=2, dp=2).device_groups("dp") == [[0, 2], [1, 3]]
+
+    def test_three_axis_mixed_radix(self):
+        mesh = Mesh(pp=2, dp=2, ep=2)
+        assert mesh.n_devices == 8
+        assert mesh.device_groups("pp") == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        assert mesh.device_groups("ep") == [[0, 2, 4, 6], [1, 3, 5, 7]]
+
+    def test_axis_order_is_identity(self):
+        assert Mesh(pp=2, dp=4) != Mesh(dp=4, pp=2)
+        assert Mesh(pp=2, dp=4) == Mesh(pp=2, dp=4)
+        assert hash(Mesh(pp=2, dp=4)) == hash(Mesh(pp=2, dp=4))
+
+    def test_bad_axes_rejected(self):
+        with pytest.raises(StrategyError):
+            Mesh()
+        with pytest.raises(StrategyError):
+            Mesh(pp=0)
+        with pytest.raises(StrategyError, match="no axis 'tp'"):
+            Mesh(pp=2).axis_size("tp")
+
+
+# ---------------------------------------------------------------------------
+# composition + validation
+# ---------------------------------------------------------------------------
+
+class TestComposition:
+    def test_pipe_operator_builds_fragment_chain(self):
+        s = Strategy(Mesh(pp=2, dp=2),
+                     Pipeline("1f1b", n_mb=4) | ZeRO(stage=2)
+                     | Overlap(prefetch=2, bucket_mb=8))
+        assert s.pipeline.schedule == "1f1b"
+        assert s.zero.stage == 2
+        assert s.overlap.prefetch == 2
+        s2 = Strategy(Mesh(pp=2, dp=2), Pipeline("1f1b", n_mb=4)) \
+            | ZeRO(stage=2) | Overlap(prefetch=2, bucket_mb=8)
+        assert s2 == s
+
+    def test_duplicate_fragment_error_names_fragment(self):
+        s = Strategy(Mesh(pp=2), Pipeline("1f1b", n_mb=2)
+                     | Pipeline("gpipe", n_mb=4))
+        with pytest.raises(StrategyError, match="gpipe.*duplicate"):
+            s.validate()
+
+    def test_validation_errors_name_offending_fragment(self):
+        cases = [
+            (Pipeline("nope", n_mb=2), "unknown schedule"),
+            (Pipeline("1f1b", n_mb=0), "n_mb"),
+            (Pipeline("1f1b", n_mb=2, axis="tp"), "no axis"),
+            (Pipeline("dualpipev", n_mb=2, n_stages=6), "dualpipev"),
+            (ZeRO(stage=7), "stage"),
+            (ExpertParallel(degree=3), "degree"),
+        ]
+        for frag, needle in cases:
+            strat = (Strategy(Mesh(pp=2, dp=2), frag) if
+                     isinstance(frag, Pipeline) else
+                     Strategy(Mesh(pp=2, dp=2),
+                              Pipeline("1f1b", n_mb=2) | frag))
+            with pytest.raises(StrategyError) as ei:
+                strat.validate()
+            msg = str(ei.value)
+            assert "fragment" in msg and needle in msg, msg
+
+    def test_zero_requires_pipeline(self):
+        with pytest.raises(StrategyError, match="Pipeline"):
+            Strategy(Mesh(pp=2, dp=2), ZeRO(stage=1)).validate()
+
+    def test_raw_does_not_compose_with_structured(self):
+        s = Strategy(Mesh(pp=2),
+                     Pipeline("1f1b", n_mb=2)
+                     | RawDirectives((Split(F(), num_microbatches=2),)))
+        with pytest.raises(StrategyError, match="RawDirectives"):
+            s.validate()
+
+    def test_split_backward_derivation(self):
+        m = Mesh(pp=2)
+        assert Strategy(m, Pipeline("dualpipev", n_mb=4)).split_backward
+        assert Strategy(m, Pipeline("zb1f1b", n_mb=4)).split_backward
+        assert not Strategy(m, Pipeline("1f1b", n_mb=4)).split_backward
+        assert Strategy(m, Pipeline("1f1b", n_mb=4,
+                                    split_backward=True)).split_backward
+
+    def test_replacing_and_without(self):
+        base = Strategy(Mesh(pp=2, dp=2),
+                        Pipeline("1f1b", n_mb=4)
+                        | Overlap(prefetch=4, bucket_mb=32))
+        swapped = base.replacing(Overlap(prefetch=1, bucket_mb=0))
+        assert swapped.overlap.prefetch == 1
+        assert swapped.pipeline == base.pipeline
+        added = base.without(Overlap).replacing(Overlap(prefetch=2,
+                                                        bucket_mb=8))
+        assert added.overlap.prefetch == 2
+        assert base.without(Overlap).overlap is None
+
+    def test_overlap_config_bridge(self):
+        ov = Overlap(prefetch=3, bucket_mb=16)
+        cfg = ov.to_overlap_config()
+        assert cfg.enabled and cfg.prefetch == 3
+        assert cfg.bucket_bytes == 16 << 20
+        assert Overlap.from_config(cfg) == ov
+        off = Overlap.from_config(OverlapConfig.off())
+        assert not off.to_overlap_config().enabled
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def _sample_strategies():
+    return [
+        Strategy(Mesh(pp=2), Pipeline("gpipe", n_mb=4)),
+        Strategy(Mesh(pp=2, dp=2),
+                 Pipeline("1f1b", n_mb=8) | ZeRO(stage=3)),
+        Strategy(Mesh(pp=2, dp=2),
+                 Pipeline("dualpipev", n_mb=8) | ZeRO(stage=2,
+                                                      bucket_mb=4)
+                 | ExpertParallel() | Overlap(prefetch=4, bucket_mb=32)),
+    ]
+
+
+class TestJson:
+    def test_round_trip_byte_stable(self):
+        for s in _sample_strategies():
+            doc = s.to_json()
+            back = Strategy.from_json(doc)
+            assert back == s
+            assert back.to_json() == doc          # byte-for-byte
+            assert Strategy.from_json(back.to_json()).to_json() == doc
+
+    def test_unknown_schema_version_rejected(self):
+        doc = _sample_strategies()[0].to_json()
+        for bad in ('"schema":0', '"schema":2', '"schema":"1"'):
+            mutated = doc.replace('"schema":1', bad)
+            with pytest.raises(StrategyError, match="schema version"):
+                Strategy.from_json(mutated)
+
+    def test_unknown_fragment_kind_rejected(self):
+        doc = _sample_strategies()[1].to_json()
+        mutated = doc.replace('"kind":"zero"', '"kind":"fsdp"')
+        with pytest.raises(StrategyError, match="unknown fragment kind"):
+            Strategy.from_json(mutated)
+
+    def test_unknown_fragment_field_rejected(self):
+        doc = _sample_strategies()[0].to_json()
+        mutated = doc.replace('"n_mb":4', '"n_mb":4,"warp":9')
+        with pytest.raises(StrategyError, match="unknown field"):
+            Strategy.from_json(mutated)
+
+    def test_raw_directives_not_serializable(self):
+        s = Strategy(None, RawDirectives(()))
+        with pytest.raises(StrategyError, match="not serializable|mesh"):
+            s.to_json()
+
+    def test_garbage_json_rejected(self):
+        with pytest.raises(StrategyError, match="parse"):
+            Strategy.from_json("{nope")
+
+
+# ---------------------------------------------------------------------------
+# lowering parity: strategy front door == legacy directive lists
+# ---------------------------------------------------------------------------
+
+R, DP, N_MB, BATCH = 2, 2, 4, 16
+S = 2 * R
+
+
+def _moe_params():
+    p = make_mlp_params(jax.random.PRNGKey(0), S)
+    for i in range(S - 1):
+        if i % 2 == 1:
+            p[f"exp{i}"] = {"w1": jnp.ones((16, 16)) * .1,
+                            "w2": jnp.ones((16, 16)) * .1}
+    return p
+
+
+def _legacy_schedule(kind, zero=3, ep=True):
+    groups = [[r * DP + i for i in range(DP)] for r in range(R)]
+    seqs = build_rank_sequences(kind, R, N_MB, S)
+    sched = emit_directives(kind, seqs, device_groups=groups, n_stages=S)
+    extra = []
+    for s in range(S):
+        g = groups[rank_of_stage(kind, s, R, S)]
+        extra.append(Replicate(F(pp=s, ep="-"), devices=g,
+                               reduce_stream="dp", gather_stream="ag",
+                               shard_grads=zero >= 2,
+                               shard_params=zero >= 3))
+        if s % 2 == 1 and s < S - 1:
+            if ep:
+                extra.append(Shard(F(pp=s, ep="*"), devices=g,
+                                   stream="ep"))
+            else:
+                extra.append(Replicate(F(pp=s, ep="*"), devices=g,
+                                       reduce_stream="dp",
+                                       gather_stream="ag",
+                                       shard_grads=zero >= 2,
+                                       shard_params=zero >= 3))
+    return sched[:S] + extra + sched[S:]
+
+
+def _device_sequences(prog):
+    """Per-device per-stream (name, MB, role) dispatch sequences — node
+    ids differ across compiles, so compare structural identity."""
+    out = {}
+    for dev, p in prog.plan.device_plans.items():
+        out[dev] = {
+            stream: [(prog.dag.nodes[n].name,
+                      prog.dag.nodes[n].dims.get("MB"),
+                      prog.dag.nodes[n].dims.get("PASS"), role)
+                     for (n, _, role) in keys]
+            for stream, keys in p.streams.items()}
+    return out
+
+
+class TestLoweringParity:
+    @pytest.mark.parametrize("kind", SCHEDULE_KINDS)
+    def test_all_kinds_plan_identical_to_legacy_path(self, kind):
+        """Acceptance: for every schedule kind the Strategy path yields
+        the same per-device op sequences as the pre-existing
+        emit_directives + hand-built Replicate/Shard list."""
+        params = _moe_params()
+        fwd = make_moe_forward(S)
+        legacy = compile_training(
+            fwd, params, inputs_spec(BATCH), _legacy_schedule(kind),
+            split_backward=kind in ("dualpipev", "zb1f1b"))
+        strat = Strategy(Mesh(pp=R, dp=DP),
+                         Pipeline(kind, n_mb=N_MB) | ZeRO(stage=3)
+                         | ExpertParallel())
+        new = compile_training(fwd, params, inputs_spec(BATCH),
+                               strategy=strat)
+        assert _device_sequences(new) == _device_sequences(legacy)
+        assert new.strategy is strat
+
+    def test_replicated_experts_parity(self):
+        """ep=1 (no ExpertParallel fragment): experts replicate through
+        the ZeRO fragment exactly like the legacy elif branch."""
+        params = _moe_params()
+        fwd = make_moe_forward(S)
+        legacy = compile_training(fwd, params, inputs_spec(BATCH),
+                                  _legacy_schedule("1f1b", ep=False))
+        strat = Strategy(Mesh(pp=R, dp=DP),
+                         Pipeline("1f1b", n_mb=N_MB) | ZeRO(stage=3))
+        new = compile_training(fwd, params, inputs_spec(BATCH),
+                               strategy=strat)
+        assert _device_sequences(new) == _device_sequences(legacy)
+
+    def test_strategy_numerics_match_oracle(self):
+        """The strategy front door is not just plan-identical — the
+        interpreter reproduces the unscheduled model's loss."""
+        from repro.runtime import Interpreter
+        from helpers import make_mlp_forward
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        strat = Strategy(Mesh(pp=R), Pipeline("1f1b", n_mb=N_MB))
+        prog = compile_training(make_mlp_forward(S), params,
+                                inputs_spec(BATCH), strategy=strat)
+        batch = make_batch(BATCH)
+        res = Interpreter(prog).run(batch)
+        l, g = mlp_oracle(params, batch["x"], batch["y"], S)
+        assert res.loss == pytest.approx(l, abs=1e-6)
+
+    def test_legacy_schedule_arg_still_works_as_raw_shim(self):
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        from helpers import make_mlp_forward
+        with pytest.deprecated_call():
+            prog = compile_training(make_mlp_forward(S), params,
+                                    inputs_spec(BATCH),
+                                    _legacy_schedule("1f1b", ep=False,
+                                                     zero=1)[:S + 1])
+        assert prog.strategy.raw          # wrapped into RawDirectives
+
+    def test_strategy_and_legacy_args_mutually_exclusive(self):
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        from helpers import make_mlp_forward
+        strat = Strategy(Mesh(pp=R), Pipeline("1f1b", n_mb=2))
+        with pytest.raises(ValueError, match="not both"):
+            compile_training(make_mlp_forward(S), params,
+                             inputs_spec(BATCH),
+                             schedule=[Split(F(), num_microbatches=2)],
+                             strategy=strat)
+
+
+# ---------------------------------------------------------------------------
+# satellite: actionable errors
+# ---------------------------------------------------------------------------
+
+class TestDirectiveErrors:
+    def _dense_prog_dag(self):
+        from repro.core.autodiff import build_backward
+        from repro.core.trace import Recorder
+        from helpers import make_mlp_forward
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        rec = Recorder(params)
+        tvs = {name: rec.input(name, shape, dtype)
+               for name, (shape, dtype) in inputs_spec(BATCH).items()}
+        loss = make_mlp_forward(S)(rec, tvs)
+        dag = rec.finalize(loss)
+        build_backward(dag)
+        return dag
+
+    def test_place_no_match_lists_dims_and_nearest_nodes(self):
+        dag = self._dense_prog_dag()
+        with pytest.raises(ValueError) as ei:
+            Place(F(pq=99), devices=[0]).apply(dag)
+        msg = str(ei.value)
+        assert "Available dims" in msg and "pp" in msg
+        assert "Nearest nodes" in msg and "s0" in msg
+
+    def test_order_no_match_reports(self):
+        dag = self._dense_prog_dag()
+        with pytest.raises(ValueError, match="Available dims"):
+            Order([F(pp=123)]).apply(dag)
+
+    def test_shard_no_match_reports_chunks(self):
+        dag = self._dense_prog_dag()
+        with pytest.raises(ValueError, match="matched no chunks"):
+            Shard(F(ep="*"), devices=[0]).apply(dag)
+
+    def test_order_before_split_footgun_raises(self):
+        """Legacy path: an Order with overlap groups issued before the
+        Split that clones its nodes used to silently drop the groups —
+        now a loud ValueError."""
+        from helpers import make_mlp_forward
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        bad = [Place(F(pp=s), devices=[0]) for s in range(S)] + [
+            Order([[F(pp=0, PASS="F"), F(pp=1, PASS="F")]],),
+            Split(F(), num_microbatches=2),
+        ]
+        with pytest.raises(ValueError, match="Order after Split|after"):
+            compile_training(make_mlp_forward(S), params,
+                             inputs_spec(BATCH), bad)
+
+
+# ---------------------------------------------------------------------------
+# Candidate <-> Strategy bridge (the tuner speaks the same dialect)
+# ---------------------------------------------------------------------------
+
+class TestCandidateBridge:
+    def test_round_trip_through_strategy(self):
+        mesh = MeshSpec(pp=2, dp=2)
+        for cand in (Candidate("1f1b", n_mb=4),
+                     Candidate("dualpipev", n_mb=8, zero=3, ep=2,
+                               prefetch=4, bucket_mb=16),
+                     Candidate("gpipe", n_mb=4, zero=1)):
+            s = cand.to_strategy(mesh)
+            assert Candidate.from_strategy(s) == cand
+            # and the strategy document round-trips byte-stably too
+            assert Strategy.from_json(s.to_json()) == s
+
+    def test_candidate_strategy_compiles_like_directives(self):
+        """tune.build_candidate_program (Strategy path) matches the
+        lowered candidate_directives list applied by hand."""
+        from repro.configs import get_config
+        from repro.tune import (build_candidate_program,
+                                candidate_directives, decompose)
+        from repro.tune.proxy import (make_proxy_forward,
+                                      make_proxy_params)
+        cfg = get_config("qwen3-1b")
+        mesh = MeshSpec(pp=2, dp=2)
+        cand = Candidate("1f1b", n_mb=4, zero=3)
+        tokens = 4096
+        prog, sm = build_candidate_program(cfg, mesh, cand, tokens)
+        sched = candidate_directives(cfg, mesh, cand, sm)
+        legacy = compile_training(
+            make_proxy_forward(sm), make_proxy_params(sm),
+            {"x": ((tokens, sm.d_model), "bfloat16"),
+             "y": ((tokens, sm.d_model), "bfloat16")},
+            sched, split_backward=False)
+        assert _device_sequences(prog) == _device_sequences(legacy)
