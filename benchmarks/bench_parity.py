@@ -10,7 +10,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import F, Replicate, compile_training
+from repro.core import (F, RawDirectives, Replicate, Strategy,
+                        compile_training)
 from repro.runtime import Interpreter
 
 from .common import D, emit, loss_fn, make_forward, make_params, stage_fn
@@ -43,7 +44,8 @@ def main() -> None:
     sched = [Replicate(F(), devices=[0, 1], reduce_stream="dp")]
     prog = compile_training(fwd, params, {"x": ((BATCH, D), "float32"),
                                           "y": ((BATCH, D), "float32")},
-                            sched)
+                            strategy=Strategy(
+                                None, RawDirectives(tuple(sched))))
     interp = Interpreter(prog, track_memory=False)
     interp.run({"x": x, "y": y})  # warm caches
     t0 = time.perf_counter()

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.core import (ExpertParallel, Mesh, Overlap, Pipeline, Strategy,
                         ZeRO, compile_training)
+# re-exported for benches composing activation-memory fragments
+from repro.core import Offload, Remat  # noqa: F401
 
 D = 32
 
@@ -63,11 +65,13 @@ def make_forward(n_stage, experts_every=0):
 
 def build_pp_strategy(kind: str, n_ranks: int, n_mb: int,
                       dp_per_rank: int = 1, experts_every: int = 0,
-                      zero: int = 0, overlap=None) -> Strategy:
+                      zero: int = 0, overlap=None, remat=None,
+                      offload=None) -> Strategy:
     """The declarative strategy the benches run: PP(kind) x
-    DP(dp_per_rank) x optional EP, ZeRO level on the DP groups, and the
+    DP(dp_per_rank) x optional EP, ZeRO level on the DP groups, the
     optional overlap engine (``overlap``: an ``OverlapConfig`` or
-    None)."""
+    None), and the optional activation-memory fragments (``remat``:
+    a ``Remat``; ``offload``: an ``Offload``)."""
     frags = [Pipeline(kind, n_mb=n_mb)]
     if dp_per_rank > 1 or zero:
         frags.append(ZeRO(stage=zero))
@@ -75,12 +79,17 @@ def build_pp_strategy(kind: str, n_ranks: int, n_mb: int,
         frags.append(ExpertParallel())
     if overlap is not None:
         frags.append(Overlap.from_config(overlap))
+    if remat is not None:
+        frags.append(remat)
+    if offload is not None:
+        frags.append(offload)
     return Strategy(Mesh(pp=n_ranks, dp=dp_per_rank), tuple(frags))
 
 
 def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
                      dp_per_rank: int = 1, experts_every: int = 0,
-                     zero: int = 0, d=D, seed=0, overlap=None):
+                     zero: int = 0, d=D, seed=0, overlap=None,
+                     remat=None, offload=None):
     """Compile a Piper program through the Strategy front door:
     PP(kind) x DP(dp_per_rank) x optional EP, with ZeRO level on the DP
     groups.  Every schedule kind runs the SAME 2R-stage model
@@ -90,7 +99,8 @@ def build_pp_program(kind: str, n_ranks: int, n_mb: int, batch: int,
     params = make_params(S, d, experts_every, seed)
     fwd = make_forward(S, experts_every)
     strat = build_pp_strategy(kind, n_ranks, n_mb, dp_per_rank,
-                              experts_every, zero, overlap)
+                              experts_every, zero, overlap,
+                              remat=remat, offload=offload)
     inputs = {"x": ((batch, d), "float32"), "y": ((batch, d), "float32")}
     prog = compile_training(fwd, params, inputs, strategy=strat)
     return prog, params

@@ -17,12 +17,15 @@ def main() -> None:
     jax.config.update("jax_platform_name", "cpu")
     sections = []
     from . import (bench_kernels, bench_overlap, bench_parity,
-                   bench_pp_schedules, bench_pp_zero, bench_scaling)
+                   bench_pp_schedules, bench_pp_zero, bench_remat,
+                   bench_scaling)
     sections = [
         ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
          bench_pp_schedules.main),
         ("PR2: overlap engine on/off (ZeRO-3 x PP, DualPipeV)",
          bench_overlap.main),
+        ("PR4: Remat/Offload memory-throughput frontier",
+         bench_remat.main),
         ("Table1+Fig8: PP x ZeRO support + peak memory",
          bench_pp_zero.main),
         ("Table2: DP ZeRO-1 parity + dispatch overhead",

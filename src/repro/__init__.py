@@ -11,12 +11,12 @@ subpackages:
     prog = compile_training(forward, params, inputs, strategy=strat)
 """
 from .core import compile_training
-from .core.strategy import (SCHEMA_VERSION, ExpertParallel, Mesh, Overlap,
-                            Pipeline, RawDirectives, Strategy,
-                            StrategyError, ZeRO)
+from .core.strategy import (SCHEMA_VERSION, ExpertParallel, Mesh,
+                            Offload, Overlap, Pipeline, RawDirectives,
+                            Remat, Strategy, StrategyError, ZeRO)
 
 __all__ = [
-    "ExpertParallel", "Mesh", "Overlap", "Pipeline", "RawDirectives",
-    "SCHEMA_VERSION", "Strategy", "StrategyError", "ZeRO",
-    "compile_training",
+    "ExpertParallel", "Mesh", "Offload", "Overlap", "Pipeline",
+    "RawDirectives", "Remat", "SCHEMA_VERSION", "Strategy",
+    "StrategyError", "ZeRO", "compile_training",
 ]

@@ -6,17 +6,17 @@ from .filters import F
 from .overlap import OverlapConfig, apply_overlap
 from .plan import DevicePlan, GlobalPlan, ScheduleRejected, Task
 from .scheduler import build_plan, validate_comm_order
-from .strategy import (SCHEMA_VERSION, ExpertParallel, Mesh, Overlap,
-                       Pipeline, RawDirectives, Strategy, StrategyError,
-                       ZeRO)
+from .strategy import (SCHEMA_VERSION, ExpertParallel, Mesh, Offload,
+                       Overlap, Pipeline, RawDirectives, Remat, Strategy,
+                       StrategyError, ZeRO)
 from .trace import Recorder, TracedValue
 
 __all__ = [
     "Bucket", "CompiledProgram", "DevicePlan", "Edge", "ExpertParallel",
-    "F", "GlobalPlan", "Mesh", "Node", "Order", "Overlap",
+    "F", "GlobalPlan", "Mesh", "Node", "Offload", "Order", "Overlap",
     "OverlapConfig", "Pipeline", "Place", "RawDirectives", "Recorder",
-    "Replicate", "SCHEMA_VERSION", "ScheduleRejected", "Shard", "Split",
-    "Strategy", "StrategyError", "Task", "TracedValue", "TrainingDAG",
-    "ValueSpec", "ZeRO", "apply_overlap", "build_plan",
+    "Remat", "Replicate", "SCHEMA_VERSION", "ScheduleRejected", "Shard",
+    "Split", "Strategy", "StrategyError", "Task", "TracedValue",
+    "TrainingDAG", "ValueSpec", "ZeRO", "apply_overlap", "build_plan",
     "compile_training", "validate_comm_order",
 ]

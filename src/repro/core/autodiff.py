@@ -128,7 +128,7 @@ def build_backward(dag: TrainingDAG, split_backward: bool = False) -> None:
                 bucket=fwd.bucket,
                 n_outputs=1 + m,
                 out_specs=[grad_spec] + [feed_spec(j) for j in range(m)],
-                meta={"fwd_node": nid, "n_inputs": m + k,
+                meta={"fwd_node": nid, "n_inputs": m + k, "n_cots": k,
                       "is_backward": True},
             )
             # residual edges: forward inputs flow to the backward chunk too

@@ -56,7 +56,12 @@ def compile_training(
     ``schedule`` / ``split_backward`` / ``overlap`` are the deprecated
     directive-list spelling; a non-empty ``schedule`` is wrapped into a
     ``RawDirectives`` fragment so both paths share one pipeline.  The
-    two spellings are mutually exclusive."""
+    two spellings are mutually exclusive.
+
+    The strategy's ``Remat`` fragment rewrites the backward chunks'
+    residual policy (``passes.apply_remat``) right after autodiff; the
+    ``Offload`` fragment splices host round-trip nodes in the
+    finalization passes (``passes.apply_offload``)."""
     if strategy is not None:
         if schedule or split_backward or overlap is not None:
             raise ValueError(
@@ -72,7 +77,10 @@ def compile_training(
                 "a core.strategy.Strategy and pass strategy= instead",
                 DeprecationWarning, stacklevel=2)
         strategy = Strategy(
-            mesh=None, fragments=(RawDirectives(tuple(schedule)),))
+            mesh=None, fragments=(RawDirectives(
+                tuple(schedule), split_backward=bool(split_backward)),))
+    remat = strategy.remat
+    offload = strategy.offload
 
     rec = Recorder(params)
     tvs = {name: rec.input(name, shape, dtype)
@@ -82,12 +90,15 @@ def compile_training(
 
     if build_bwd:
         build_backward(dag, split_backward=split_backward)
+        if remat is not None and remat.policy != "full":
+            passes.apply_remat(dag, remat.policy, params=params,
+                               scope=remat.scope_dict())
 
     directives = strategy.lower(dag=dag)
     for directive in directives:
         directive.apply(dag)
 
-    passes.run_all(dag, overlap=overlap)
+    passes.run_all(dag, overlap=overlap, offload=offload)
     plan = build_plan(dag)
     prog = CompiledProgram(dag=dag, plan=plan, params=params,
                            schedule=tuple(directives), strategy=strategy)

@@ -97,6 +97,9 @@ PASS_BW = "Bw"   # backward-for-weights
 COMM_OPS = (
     "p2p", "send", "recv", "all_reduce", "all_gather", "reduce_scatter",
     "all_to_all", "broadcast",
+    # host offload round-trip (Offload directive): device->host stash and
+    # host->device fetch of a residual activation on the offload stream
+    "d2h", "h2d",
 )
 
 

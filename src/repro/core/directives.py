@@ -18,7 +18,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence, Union
 
-from .dag import (PASS_B, PASS_BW, PASS_F, Node, TrainingDAG, ValueSpec)
+from .dag import (PASS_B, PASS_BW, PASS_F, Edge, Node, TrainingDAG,
+                  ValueSpec)
 from .filters import (F, as_filter, no_match_report, select_union,
                       sinks_within, sources_within)
 
@@ -253,8 +254,7 @@ class Split(Directive):
                         kind=old.kind, name=old.name, dims=dict(old.dims),
                         devices=old.devices, stream=old.stream, fn=old.fn,
                         bucket=old.bucket, n_outputs=old.n_outputs,
-                        out_specs=[self._split_spec(s) for s in
-                                   old.out_specs] if split_specs
+                        out_specs=self._split_out_specs(old) if split_specs
                         else list(old.out_specs),
                         op=old.op, group=old.group,
                         src_device=old.src_device, dst_device=old.dst_device,
@@ -278,7 +278,7 @@ class Split(Directive):
                     if e.dst in matched:
                         dag.add_edge(clones[(e.src, mb)].id, e.src_out,
                                      clones[(e.dst, mb)].id, e.dst_in,
-                                     self._split_spec(e.spec))
+                                     self._split_edge_spec(old_nodes, e))
                     else:
                         # boundary output (e.g. grads flowing out): replicate
                         dag.add_edge(clones[(e.src, mb)].id, e.src_out,
@@ -289,11 +289,12 @@ class Split(Directive):
         for nid in matched:
             n = dag.nodes[nid]
             if n.is_chunk or n.payload == "act":
-                n.out_specs = [self._split_spec(s) for s in n.out_specs]
+                n.out_specs = self._split_out_specs(n)
         for i, e in enumerate(list(dag.edges)):
             if e.src in matched and e.dst in matched:
                 dag.edges.remove(e)
-                dag.edges.append(e.moved(spec=self._split_spec(e.spec)))
+                dag.edges.append(e.moved(
+                    spec=self._split_edge_spec(dag.nodes, e)))
 
         # graph inputs: each consumer inside the split region now has k
         # sliced instances
@@ -350,6 +351,21 @@ class Split(Directive):
         if lead % self.num_microbatches == 0:
             return spec.with_leading(lead // self.num_microbatches)
         return spec
+
+    def _split_out_specs(self, node: Node) -> list:
+        """Per-slot spec shrink; ``static_out_slots`` (remat residual
+        leaves that do not scale with the batch, e.g. saved weights)
+        keep their spec."""
+        static = set(node.meta.get("static_out_slots", ()))
+        return [s if i in static else self._split_spec(s)
+                for i, s in enumerate(node.out_specs)]
+
+    def _split_edge_spec(self, nodes, e: Edge) -> ValueSpec:
+        src = nodes.get(e.src) if hasattr(nodes, "get") else None
+        if src is not None and \
+                e.src_out in src.meta.get("static_out_slots", ()):
+            return e.spec
+        return self._split_spec(e.spec)
 
 
 # ---------------------------------------------------------------------------

@@ -98,6 +98,9 @@ def apply_overlap(dag: TrainingDAG, cfg: OverlapConfig) -> dict:
              "prefetch_edges": 0}
     if cfg.enabled and cfg.bucket_bytes > 0:
         stats.update(bucket_zero_collectives(dag, cfg.bucket_bytes))
+    else:
+        dag.meta.setdefault("fused_gathers", 0)
+        dag.meta.setdefault("fused_reduce_scatters", 0)
     if cfg.enabled:
         assign_overlap_streams(dag, cfg.gather_stream, cfg.reduce_stream)
     k = max(1, int(cfg.prefetch)) if cfg.enabled else 1

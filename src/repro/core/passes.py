@@ -1,11 +1,23 @@
-"""Compiler finalization passes (paper §4.2 phase 2 tail).
+"""Compiler finalization passes (paper §4.2 phase 2 tail) and the
+activation-memory IR transformations (DESIGN.md §11).
 
+  apply_remat        — rewrite backward chunks' residual edges for the
+                       ``Remat`` directive: stash the vjp residuals as
+                       explicit forward outputs (``policy="none"``)
+                       instead of re-running the forward (``"full"``,
+                       today's default), or alternate per chunk
+                       (``"selective"``).  Runs on the single-device DAG
+                       right after autodiff, before any directives.
   insert_p2p         — send/recv comms at cross-placement data edges
   elide_allgathers   — collapse duplicate param all-gathers (ZeRO-3)
   merge_grad_reduces — collapse per-microbatch all-reduces into one
                        accumulated reduce (classic grad accumulation);
                        ZeRO-2 reduce-scatters are kept per-microbatch so
                        full-gradient buffers can be freed (paper §6.2)
+  apply_offload      — ``Offload`` directive: splice d2h/h2d host
+                       round-trip comm nodes on residual edges whose
+                       forward->backward stash window exceeds ``depth``
+                       chunks, on a dedicated offload stream
   assign_default_streams — unassigned nodes run on the default stream
 
 When the compiler is handed an ``OverlapConfig``, the joint
@@ -18,6 +30,244 @@ from __future__ import annotations
 from .dag import PASS_B, TrainingDAG, ValueSpec
 
 DEFAULT_STREAM = "main"
+
+REMAT_POLICIES = ("full", "selective", "none")
+
+
+# ---------------------------------------------------------------------------
+# Remat — programmable residual policy (runs before directives)
+# ---------------------------------------------------------------------------
+
+def apply_remat(dag: TrainingDAG, policy: str, params: dict,
+                scope: dict | None = None) -> int:
+    """Rewrite backward chunks' residual edges for the declared
+    activation-memory policy.
+
+    ``"full"`` (the default the repo always had): each backward chunk
+    re-runs its forward under ``jax.vjp`` from the chunk-boundary
+    activations — nothing to rewrite.  ``"none"``: the forward chunk is
+    rewritten to emit its vjp residuals as additional outputs, and the
+    backward chunk consumes those stashed arrays instead of re-running
+    the forward — less recompute (B ~= 2xF instead of 3xF), more live
+    activation memory (the residuals stay resident across the
+    forward->backward stash window).  ``"selective"`` applies ``"none"``
+    to every other matched chunk (Checkmate-style middle point).
+
+    ``scope`` restricts the policy to forward chunks whose ``dims``
+    match the given {dim: index} mapping (e.g. ``{"pp": 0}``); ``None``
+    matches every chunk.  ``params`` supplies bucket param shapes for
+    the ``jax.eval_shape`` residual probe (nothing is allocated).
+
+    Must run on the single-device DAG after ``build_backward`` and
+    before any directives (Split clones the rewritten pairs per
+    microbatch; ``static_out_slots`` tells Split which residual specs do
+    not scale with the batch).  Returns the number of stashed chunks.
+    """
+    if policy not in REMAT_POLICIES:
+        raise ValueError(f"unknown remat policy {policy!r} "
+                         f"(choose from {REMAT_POLICIES})")
+    import jax
+
+    def in_scope(node) -> bool:
+        if not scope:
+            return True
+        return all(node.dims.get(d) == v for d, v in scope.items())
+
+    fwd_ids = [nid for nid in dag.toposort()
+               if dag.nodes[nid].is_chunk
+               and dag.nodes[nid].dims.get("PASS") == "F"
+               and in_scope(dag.nodes[nid])]
+    param_avals = {
+        k: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), v)
+        for k, v in params.items()}
+    stashed = 0
+    for idx, nid in enumerate(fwd_ids):
+        chunk_policy = policy if policy != "selective" else \
+            ("none" if idx % 2 == 0 else "full")
+        fwd = dag.nodes[nid]
+        bwds = [b for b in (fwd.meta.get("bwd_node"),
+                            fwd.meta.get("bw_node")) if b is not None]
+        fwd.meta["remat"] = chunk_policy
+        for b in bwds:
+            dag.nodes[b].meta["remat"] = chunk_policy
+        if chunk_policy == "none" and _stash_residuals(dag, fwd, bwds,
+                                                       param_avals):
+            stashed += 1
+    dag.meta["remat"] = {"policy": policy, "stashed": stashed,
+                         "scope": dict(scope) if scope else None}
+    return stashed
+
+
+def _chunk_in_avals(dag: TrainingDAG, nid: int, m: int):
+    """ShapeDtypeStructs of a chunk's ``m`` data-input slots."""
+    import jax
+    specs = [None] * m
+    for e in dag.in_edges(nid):
+        if 0 <= e.dst_in < m:
+            specs[e.dst_in] = e.spec
+    for name, (spec, consumers) in dag.inputs.items():
+        for (cnid, slot) in consumers:
+            if cnid == nid and 0 <= slot < m:
+                specs[slot] = spec
+    if any(s is None for s in specs):
+        missing = [j for j, s in enumerate(specs) if s is None]
+        raise ValueError(f"chunk {dag.nodes[nid].short()} has unfed "
+                         f"input slots {missing}")
+    return [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in specs]
+
+
+def _stash_residuals(dag: TrainingDAG, fwd, bwd_ids: list[int],
+                     param_avals: dict) -> bool:
+    """Rewrite one forward/backward chunk pair to residual-stash form.
+
+    The forward's exec fn becomes ``vjp``-under-the-hood: it returns the
+    original outputs plus the vjp closure's residual arrays (the vjp
+    function is a pytree; its leaves are the residuals and its treedef
+    is static, captured once at build time under ``jax.eval_shape``).
+    Each backward chunk reconstructs the closure from the stashed leaves
+    and applies it — no forward re-run.  Residual leaves whose shape
+    does not scale with the batch (e.g. saved weights) are recorded in
+    ``meta["static_out_slots"]`` so Split leaves their specs alone.
+    """
+    import jax
+    from .dag import ValueSpec
+
+    m = fwd.meta.get("n_inputs", 0)
+    k = fwd.n_outputs
+    base_fn = fwd.fn
+    has_bucket = fwd.bucket is not None
+    in_avals = _chunk_in_avals(dag, fwd.id, m)
+    bkt_aval = param_avals.get(fwd.bucket) if has_bucket else None
+
+    def probe(avals):
+        """(treedef, out_avals) of the vjp at the given input avals.
+        The treedef embeds the transpose jaxpr — it is SHAPE-SPECIALIZED,
+        so the backward re-derives it for the shapes it actually sees
+        (Split shrinks every chunk to microbatch shapes)."""
+        captured = {}
+
+        def run(bucket, *ins):
+            if has_bucket:
+                outs, vjp = jax.vjp(base_fn, bucket, *ins)
+            else:
+                outs, vjp = jax.vjp(lambda *i: base_fn(None, *i), *ins)
+            leaves, treedef = jax.tree_util.tree_flatten(vjp)
+            captured["treedef"] = treedef
+            return tuple(outs) + tuple(leaves)
+
+        out_avals = jax.eval_shape(run, bkt_aval, *avals)
+        return captured["treedef"], out_avals
+
+    def scaled_avals(scale: int):
+        return [jax.ShapeDtypeStruct(
+            ((a.shape[0] // scale,) + tuple(a.shape[1:])) if a.shape
+            else a.shape, a.dtype) for a in in_avals]
+
+    _, out_avals = probe(in_avals)
+    res_avals = out_avals[k:]
+    n_res = len(res_avals)
+    if n_res == 0:
+        return False  # nothing to stash; full == none for this chunk
+
+    # which residual slots scale with the batch?  probe again with every
+    # data input's leading dim doubled; leaves whose shape is unchanged
+    # (saved weights, scalars) must keep their spec across Split.
+    batch_scaled: set[int] = set(range(n_res))
+    try:
+        doubled = [jax.ShapeDtypeStruct(
+            (2 * a.shape[0],) + tuple(a.shape[1:]) if a.shape else a.shape,
+            a.dtype) for a in in_avals]
+        _, out2 = probe(doubled)
+        batch_scaled = {
+            i for i, (a, b) in enumerate(zip(res_avals, out2[k:]))
+            if tuple(a.shape) != tuple(b.shape)}
+    except Exception:
+        pass  # conservatively treat every residual as batch-scaled
+
+    def fwd_stash(bucket, *ins):
+        if has_bucket:
+            outs, vjp = jax.vjp(base_fn, bucket, *ins)
+        else:
+            outs, vjp = jax.vjp(lambda *i: base_fn(None, *i), *ins)
+        return tuple(outs) + tuple(jax.tree_util.tree_leaves(vjp))
+    fwd_stash.__name__ = f"stash_{getattr(base_fn, '__name__', 'chunk')}"
+
+    fwd.fn = fwd_stash
+    fwd.n_outputs = k + n_res
+    fwd.out_specs = list(fwd.out_specs) + [
+        ValueSpec(tuple(a.shape), str(a.dtype)) for a in res_avals]
+    fwd.meta["n_res"] = n_res
+    fwd.meta["static_out_slots"] = sorted(k + i for i in range(n_res)
+                                          if i not in batch_scaled)
+
+    treedef_cache: dict[int, object] = {}
+
+    def treedef_for(scale: int):
+        if scale not in treedef_cache:
+            treedef_cache[scale], _ = probe(scaled_avals(scale))
+        return treedef_cache[scale]
+
+    def runtime_scale(leaves) -> int:
+        """Microbatch shrink factor of the runtime leaves vs the build-
+        time (full batch) residual avals — Split divides every chunk
+        input's leading dim by the same microbatch count."""
+        for i, leaf in enumerate(leaves):
+            a = res_avals[i]
+            if i in batch_scaled and a.shape and leaf.shape \
+                    and a.shape[0] != leaf.shape[0]:
+                return max(a.shape[0] // max(leaf.shape[0], 1), 1)
+        return 1
+
+    def make_stash_bwd(pass_tag: str):
+        def bwd(bucket, *args):
+            leaves, cots = args[:n_res], args[n_res:]
+            treedef = treedef_for(runtime_scale(leaves))
+            vjp = jax.tree_util.tree_unflatten(treedef, list(leaves))
+            grads = vjp(tuple(cots))
+            if has_bucket:
+                bucket_grads, in_cots = grads[0], grads[1:]
+            else:
+                bucket_grads, in_cots = None, grads
+            if pass_tag == "Bi":
+                return (None,) + tuple(in_cots)
+            if pass_tag == "Bw":
+                return (bucket_grads,) + (None,) * m
+            return (bucket_grads,) + tuple(in_cots)
+        bwd.__name__ = (f"{pass_tag.lower()}_stash_"
+                        f"{getattr(base_fn, '__name__', 'chunk')}")
+        return bwd
+
+    for bid in bwd_ids:
+        bwd = dag.nodes[bid]
+        # drop the old residual input edges (forward inputs re-fed to
+        # the backward, slots 0..m-1) and graph-input feed references
+        dag.edges = [e for e in dag.edges
+                     if not (e.dst == bid and 0 <= e.dst_in < m)]
+        for name, (spec, consumers) in list(dag.inputs.items()):
+            kept = [(cnid, slot) for (cnid, slot) in consumers
+                    if not (cnid == bid and 0 <= slot < m)]
+            if len(kept) != len(consumers):
+                dag.inputs[name] = (spec, kept)
+        # cotangent inputs shift from slot m+j to slot n_res+j
+        remapped = []
+        for e in dag.edges:
+            if e.dst == bid and e.dst_in >= m:
+                remapped.append(e)
+        for e in remapped:
+            dag.edges.remove(e)
+            dag.edges.append(e.moved(dst_in=e.dst_in - m + n_res))
+        for key in ("seed_slots", "zero_cot_slots"):
+            if key in bwd.meta:
+                bwd.meta[key] = [s - m + n_res for s in bwd.meta[key]]
+        # stash edges: forward residual slot k+i feeds backward slot i
+        for i, a in enumerate(res_avals):
+            dag.add_edge(fwd.id, k + i, bid, i,
+                         ValueSpec(tuple(a.shape), str(a.dtype)))
+        bwd.meta["n_inputs"] = n_res + k
+        bwd.meta["n_cots"] = k
+        bwd.fn = make_stash_bwd(bwd.dims.get("PASS"))
+    return True
 
 
 def insert_p2p(dag: TrainingDAG) -> None:
@@ -87,6 +337,13 @@ def elide_allgathers(dag: TrainingDAG) -> None:
             continue
         if not src.bucket or src.bucket != dst.bucket:
             continue
+        if src.dims.get("PASS") != dst.dims.get("PASS"):
+            # remat-stash residual edges make a forward and its backward
+            # directly adjacent; never extend the forward's gather across
+            # the stash window — ZeRO-3 re-gathers in the backward, and
+            # pinning the full-param buffer for the whole window would
+            # defeat sharding (and deadlock the FSDP-style rate limiter)
+            continue
         g_src = src.meta.get("param_from_comm")
         g_dst = dst.meta.get("param_from_comm")
         if g_src is None or g_dst is None or g_src == g_dst:
@@ -140,6 +397,81 @@ def merge_grad_reduces(dag: TrainingDAG) -> None:
             dag.grad_sinks[bucket] = new_sinks
 
 
+# ---------------------------------------------------------------------------
+# Offload — host round-trip for long-stash residuals
+# ---------------------------------------------------------------------------
+
+def apply_offload(dag: TrainingDAG, payload: str = "act", depth: int = 2,
+                  stream: str = "offload") -> int:
+    """Splice ``d2h``/``h2d`` host round-trip comm nodes on residual
+    edges — data edges from a forward-pass chunk to a backward-pass
+    chunk on the same placement (boundary activations and, under
+    ``Remat(policy="none")``, stashed vjp residuals).
+
+    Only stashes whose forward->backward window exceeds ``depth`` chunks
+    (in the device's dataflow order) are offloaded: short windows are
+    not worth the round-trip.  The activation leaves the device ledger
+    at ``d2h`` completion and is re-charged at ``h2d``; a temporal edge
+    gates each ``h2d`` on the chunk ``depth`` positions before its
+    consumer, so fetches overlap the preceding compute while at most
+    ~``depth`` fetched-back buffers sit resident early (the PipeDream
+    stash-depth pressure knob, per schedule).  Both nodes run on a
+    dedicated ``stream`` so the DMA never serializes with compute.
+
+    Runs after ``insert_p2p`` (cross-device residuals go through p2p
+    and are skipped).  Returns the number of round-trip pairs."""
+    if payload != "act":
+        raise ValueError(f"Offload payload {payload!r} not supported "
+                         "(only 'act' — activation residuals)")
+    topo = dag.topo_index()
+    seq_of: dict[tuple, list[int]] = {}
+    for n in sorted(dag.chunks(), key=lambda n: topo[n.id]):
+        seq_of.setdefault(tuple(n.devices or ()), []).append(n.id)
+    index_of = {nid: i for seq in seq_of.values()
+                for i, nid in enumerate(seq)}
+    pairs = 0
+    for e in list(dag.edges):
+        src, dst = dag.nodes[e.src], dag.nodes[e.dst]
+        if not (src.is_chunk and dst.is_chunk) or e.dst_in < 0:
+            continue
+        if src.dims.get("PASS") != "F" or \
+                dst.dims.get("PASS") not in ("B", "Bi", "Bw"):
+            continue
+        if tuple(src.devices or ()) != tuple(dst.devices or ()):
+            continue
+        if index_of[e.dst] - index_of[e.src] <= depth:
+            continue  # short stash window: not worth the round-trip
+        devices = tuple(src.devices or ())
+        # batch-static residuals (stashed weights) are FULL copies on
+        # every replica, not per-device batch shards — the cost model
+        # and ledger must not divide them by the group size
+        static = e.src_out in src.meta.get("static_out_slots", ())
+        # separate out/in lanes (one DMA queue per direction, like p2p's
+        # #snd/#rcv split): a fetch gated far in the future must never
+        # head-of-line-block later stashes from freeing device memory
+        d2h = dag.new_node(
+            kind="comm", op="d2h", name=f"offload_out:{src.name}",
+            dims=dict(dst.dims), devices=devices, group=devices,
+            stream=f"{stream}#out", payload=payload, out_specs=[e.spec],
+            meta={"offload": True, "offload_static": static})
+        h2d = dag.new_node(
+            kind="comm", op="h2d", name=f"offload_in:{dst.name}",
+            dims=dict(dst.dims), devices=devices, group=devices,
+            stream=f"{stream}#in", payload=payload, out_specs=[e.spec],
+            meta={"offload": True, "offload_static": static})
+        dag.edges.remove(e)
+        dag.add_edge(e.src, e.src_out, d2h.id, 0, e.spec)
+        dag.add_edge(d2h.id, 0, h2d.id, 0, e.spec)
+        dag.add_edge(h2d.id, 0, e.dst, e.dst_in, e.spec)
+        gate_j = index_of[e.dst] - depth
+        if gate_j > index_of[e.src]:
+            dag.add_temporal(seq_of[devices][gate_j], h2d.id)
+        pairs += 1
+    dag.meta["offload"] = {"payload": payload, "depth": depth,
+                           "stream": stream, "pairs": pairs}
+    return pairs
+
+
 def assign_default_streams(dag: TrainingDAG) -> None:
     for n in dag.nodes.values():
         if n.stream is None:
@@ -155,11 +487,16 @@ def assign_default_devices(dag: TrainingDAG) -> None:
             n.devices = dag.default_devices
 
 
-def run_all(dag: TrainingDAG, overlap=None) -> None:
+def run_all(dag: TrainingDAG, overlap=None, offload=None) -> None:
+    """``offload``: an ``(payload, depth, stream)``-shaped object (the
+    strategy's Offload fragment) or None."""
     assign_default_devices(dag)
     insert_p2p(dag)
     elide_allgathers(dag)
     merge_grad_reduces(dag)
+    if offload is not None:
+        apply_offload(dag, payload=offload.payload, depth=offload.depth,
+                      stream=offload.stream)
     assign_default_streams(dag)
     if overlap is not None:
         from .overlap import apply_overlap  # late: overlap imports us

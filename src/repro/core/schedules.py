@@ -41,9 +41,11 @@ class PipeOp:
     pas: str   # "F" | "B"
 
 
-# extra in-flight microbatches allowed beyond 2*(R-r) in dualpipev
-# (tuned against the timeline simulator; see tests/test_simulator.py —
-# at 6 the comm-free makespan is within ~4% of interleaved-1F1B)
+# extra in-flight microbatches allowed beyond 2*(R-r) in dualpipev —
+# the default for Pipeline(cap_offset=None); sweep it through the
+# Pipeline fragment (tuned against the timeline simulator; see
+# tests/test_simulator.py — at 6 the comm-free makespan is within ~4%
+# of interleaved-1F1B)
 DUALPIPEV_CAP_OFFSET = 6
 
 
@@ -78,12 +80,16 @@ def rank_of_stage(kind: str, stage: int, n_ranks: int, n_stages: int) -> int:
 
 
 def _generate(kind: str, n_ranks: int, n_stages: int,
-              n_microbatches: int, split: bool = False) -> list[RankSeq]:
+              n_microbatches: int, split: bool = False,
+              cap_offset: Optional[int] = None) -> list[RankSeq]:
     """``split=True`` emits ZeroBubble-style Bi/Bw ops: Bi propagates
     cotangents (pipeline-critical), Bw computes weight grads and is used
     as bubble filler (lowest priority) — required for DualPipeV's drain
-    phase to stay busy."""
+    phase to stay busy.  ``cap_offset`` overrides the dualpipev
+    in-flight headroom (default ``DUALPIPEV_CAP_OFFSET``)."""
     R, S, M = n_ranks, n_stages, n_microbatches
+    dpv_offset = (DUALPIPEV_CAP_OFFSET if cap_offset is None
+                  else cap_offset)
     B_TAG = "Bi" if split else "B"
     W_TAG = "Bw"
     my_stages = [stages_of_rank(kind, r, R, S) for r in range(R)]
@@ -121,7 +127,7 @@ def _generate(kind: str, n_ranks: int, n_stages: int,
             v = S // R
             return (R - r - 1) * 2 + (v - 1) * R + 1
         if kind == "dualpipev":
-            return 2 * (R - r) + DUALPIPEV_CAP_OFFSET
+            return 2 * (R - r) + dpv_offset
         raise ValueError(kind)
 
     def candidates(r: int, pas: str) -> list[PipeOp]:
@@ -192,9 +198,12 @@ def _generate(kind: str, n_ranks: int, n_stages: int,
 
 def build_rank_sequences(kind: str, n_ranks: int, n_microbatches: int,
                          n_stages: Optional[int] = None,
-                         split: Optional[bool] = None) -> list[RankSeq]:
+                         split: Optional[bool] = None,
+                         cap_offset: Optional[int] = None) -> list[RankSeq]:
     """``split`` defaults to True for dualpipev (whose drain phase relies
-    on Bi/Bw splitting, as in [35]) and False otherwise."""
+    on Bi/Bw splitting, as in [35]) and False otherwise.  ``cap_offset``
+    sweeps the dualpipev in-flight headroom (``Pipeline(cap_offset=)``;
+    None keeps ``DUALPIPEV_CAP_OFFSET``)."""
     if n_stages is None:
         n_stages = {"gpipe": n_ranks, "1f1b": n_ranks, "zb1f1b": n_ranks,
                     "interleaved_1f1b": 2 * n_ranks,
@@ -203,7 +212,7 @@ def build_rank_sequences(kind: str, n_ranks: int, n_microbatches: int,
         split = kind in ("dualpipev", "zb1f1b")
     gen_kind = "1f1b" if kind == "zb1f1b" else kind
     return _generate(gen_kind, n_ranks, n_stages, n_microbatches,
-                     split=split)
+                     split=split, cap_offset=cap_offset)
 
 
 def emit_directives(

@@ -27,10 +27,17 @@ schema versions or fragment kinds.  The autotuner's plan cache stores
 these documents, and ``launch/train.py --strategy plan.json`` replays
 one.
 
-Schema version policy: ``SCHEMA_VERSION`` bumps whenever a serialized
-field changes meaning or a fragment's lowering changes semantics (not
-for additive optional fields with defaults).  Readers reject newer and
-older versions alike — a stale strategy is re-derived, never guessed at.
+Schema version policy: ``SCHEMA_VERSION`` names the exact field set —
+it bumps whenever a serialized field changes meaning, a fragment's
+lowering changes semantics, or any field or fragment kind is ADDED
+(``to_dict`` always emits every field and ``from_dict`` rejects unknown
+ones, so "additive" changes are not readable by older builds either).
+Readers reject newer and older versions alike — a stale strategy is
+re-derived, never guessed at.
+
+Version history: 1 = PR 3 (Pipeline/ZeRO/ExpertParallel/Overlap);
+2 = PR 4 (adds Remat + Offload kinds, Pipeline.cap_offset,
+RawDirectives.split_backward).
 """
 from __future__ import annotations
 
@@ -43,8 +50,9 @@ import numpy as np
 from .directives import Directive, Order, Place, Replicate, Shard, Split
 from .filters import F
 from .overlap import OverlapConfig
+from .passes import REMAT_POLICIES
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # the five generative PP schedule builders in core/schedules.py; kept
 # here (and re-exported by tune.space) so strategy validation does not
@@ -240,6 +248,9 @@ class Pipeline(Fragment):
     n_stages: Optional[int] = None
     p2p_stream: str = "pp_comm"
     split_backward: Optional[bool] = None
+    # dualpipev in-flight microbatch headroom beyond 2*(R-r); None keeps
+    # the builder's tuned default (schedules.DUALPIPEV_CAP_OFFSET = 6)
+    cap_offset: Optional[int] = None
 
     def validate(self, strategy: "Strategy") -> None:
         if self.schedule not in SCHEDULE_KINDS:
@@ -248,6 +259,9 @@ class Pipeline(Fragment):
                 f"{self.schedule!r} (kinds: {list(SCHEDULE_KINDS)})")
         if self.n_mb < 1:
             raise StrategyError(f"fragment {self!r}: n_mb must be >= 1")
+        if self.cap_offset is not None and self.cap_offset < 0:
+            raise StrategyError(
+                f"fragment {self!r}: cap_offset must be >= 0")
         mesh = strategy.mesh
         if self.axis not in mesh:
             raise StrategyError(
@@ -376,15 +390,96 @@ class Overlap(Fragment):
 
 
 @dataclass(frozen=True)
+class Remat(Fragment):
+    """Programmable activation-residual policy (DESIGN.md §11):
+
+      ``"full"``      per-chunk rematerialization — each backward chunk
+                      re-runs its forward under ``jax.vjp`` from the
+                      boundary activations (the repo's historical
+                      hard-coded behavior; still the default);
+      ``"none"``      stash the vjp residuals as explicit IR values —
+                      no forward re-run, ~2/3 the backward compute, the
+                      residuals stay live across the forward->backward
+                      stash window;
+      ``"selective"`` alternate the two per chunk (Checkmate-style
+                      compute/memory middle point).
+
+    ``scope`` restricts the policy to chunks matching a {dim: index}
+    mapping, e.g. ``Remat("none", scope={"pp": 0})`` stashes only stage
+    0 (the deepest 1F1B stash).  Lowers to ``passes.apply_remat``."""
+    kind = "remat"
+
+    policy: str = "full"
+    scope: Optional[tuple] = None       # ((dim, index), ...) or None
+
+    def __post_init__(self):
+        s = self.scope
+        if isinstance(s, dict):
+            s = tuple(sorted(s.items()))
+        elif s is not None:
+            s = tuple((str(d), v) for d, v in s)
+        object.__setattr__(self, "scope", s)
+
+    def scope_dict(self) -> Optional[dict]:
+        return dict(self.scope) if self.scope is not None else None
+
+    def validate(self, strategy: "Strategy") -> None:
+        if self.policy not in REMAT_POLICIES:
+            raise StrategyError(
+                f"fragment {self!r}: policy must be one of "
+                f"{list(REMAT_POLICIES)}")
+        if self.scope is not None:
+            for item in self.scope:
+                if (not isinstance(item, tuple) or len(item) != 2
+                        or not isinstance(item[0], str)):
+                    raise StrategyError(
+                        f"fragment {self!r}: scope must map dim names "
+                        "to indices, e.g. {'pp': 0}")
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "policy": self.policy,
+                "scope": ([[d, v] for d, v in self.scope]
+                          if self.scope is not None else None)}
+
+
+@dataclass(frozen=True)
+class Offload(Fragment):
+    """Host offload of long-stash residuals (DESIGN.md §11): splice
+    d2h/h2d round-trip nodes on residual edges whose forward->backward
+    window exceeds ``depth`` chunks, on a dedicated ``stream`` — the
+    activation leaves the device ledger between stash and fetch, and the
+    fetch is gated ``depth`` chunks ahead of the consumer so the DMA
+    hides behind compute.  Lowers to ``passes.apply_offload``."""
+    kind = "offload"
+
+    payload: str = "act"
+    depth: int = 2
+    stream: str = "offload"
+
+    def validate(self, strategy: "Strategy") -> None:
+        if self.payload != "act":
+            raise StrategyError(
+                f"fragment {self!r}: payload must be 'act' (activation "
+                "residuals are the only offloadable payload)")
+        if self.depth < 1:
+            raise StrategyError(
+                f"fragment {self!r}: depth must be >= 1")
+
+
+@dataclass(frozen=True)
 class RawDirectives(Fragment):
     """Escape hatch wrapping a hand-assembled directive list — what the
     deprecated ``compile_training(schedule=...)`` shim turns its input
-    into.  Not serializable (directives hold closures and filters), and
-    not composable with structured fragments: the canonical lowering
-    order cannot be enforced across an opaque list."""
+    into.  ``split_backward`` carries the ZeroBubble Bi/Bw flag the
+    legacy keyword used to.  Not serializable (directives hold closures
+    and filters), and not composable with structured placement fragments
+    (Pipeline/ZeRO/ExpertParallel): the canonical lowering order cannot
+    be enforced across an opaque list.  Compiler-side fragments (Overlap,
+    Remat, Offload) do compose — they are not directives."""
     kind = "raw"
 
     directives: tuple = ()
+    split_backward: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "directives", tuple(self.directives))
@@ -407,11 +502,17 @@ FRAGMENT_KINDS: dict[str, type] = {
     ZeRO.kind: ZeRO,
     ExpertParallel.kind: ExpertParallel,
     Overlap.kind: Overlap,
+    Remat.kind: Remat,
+    Offload.kind: Offload,
     RawDirectives.kind: RawDirectives,
 }
 
 # structured fragments that may appear at most once per strategy
-_SINGLETON_KINDS = (Pipeline, ZeRO, ExpertParallel, Overlap)
+_SINGLETON_KINDS = (Pipeline, ZeRO, ExpertParallel, Overlap, Remat,
+                    Offload)
+# compiler-side fragments: not lowered to directives, so they need no
+# mesh and may compose with a RawDirectives backbone
+_COMPILER_KINDS = (Overlap, Remat, Offload)
 
 
 # ---------------------------------------------------------------------------
@@ -481,6 +582,14 @@ class Strategy:
         return self._only(Overlap)
 
     @property
+    def remat(self) -> Optional[Remat]:
+        return self._only(Remat)
+
+    @property
+    def offload(self) -> Optional[Offload]:
+        return self._only(Offload)
+
+    @property
     def raw(self) -> tuple:
         return tuple(f for f in self.fragments
                      if isinstance(f, RawDirectives))
@@ -512,7 +621,7 @@ class Strategy:
                 "across an opaque directive list")
         structured = [f for f in self.fragments
                       if isinstance(f, _SINGLETON_KINDS)
-                      and not isinstance(f, Overlap)]
+                      and not isinstance(f, _COMPILER_KINDS)]
         if structured and self.mesh is None:
             raise StrategyError(
                 f"fragment {structured[0]!r}: structured fragments need "
@@ -525,7 +634,9 @@ class Strategy:
     @property
     def split_backward(self) -> bool:
         pipe = self.pipeline
-        return pipe.resolved_split_backward() if pipe else False
+        if pipe is not None:
+            return pipe.resolved_split_backward()
+        return any(f.split_backward for f in self.raw)
 
     def overlap_config(self) -> Optional[OverlapConfig]:
         ov = self.overlap
@@ -563,7 +674,8 @@ class Strategy:
         pp = mesh[pipe.axis]
         S = pipe.stages(mesh)
         groups = mesh.device_groups(pipe.axis)
-        seqs = build_rank_sequences(pipe.schedule, pp, pipe.n_mb, S)
+        seqs = build_rank_sequences(pipe.schedule, pp, pipe.n_mb, S,
+                                    cap_offset=pipe.cap_offset)
         sched = emit_directives(pipe.schedule, seqs, device_groups=groups,
                                 n_stages=S, pp_dim=pipe.axis,
                                 p2p_stream=pipe.p2p_stream)
@@ -676,6 +788,11 @@ class Strategy:
             parts.append(f"pf{ov.prefetch}"
                          + (f"/bkt{ov.bucket_mb}M" if ov.bucket_mb
                             else ""))
+        rm, off = self.remat, self.offload
+        if rm and rm.policy != "full":
+            parts.append(f"rm-{rm.policy}")
+        if off:
+            parts.append(f"off{off.depth}")
         if self.raw:
             parts.append(f"raw[{sum(len(f.directives) for f in self.raw)}]")
         return " ".join(parts) or "<empty strategy>"

@@ -73,12 +73,25 @@ def main(argv=None):
     ap.add_argument("--tune-dp", type=int, default=2)
     ap.add_argument("--tune-budget-gb", type=float, default=None,
                     help="per-device HBM budget in GiB (default: none)")
+    ap.add_argument("--memory-budget", type=float, default=None,
+                    metavar="GIB",
+                    help="per-device memory budget in GiB, enforced on "
+                    "both paths: a --strategy whose estimated peak "
+                    "exceeds it is rejected, and --autotune only "
+                    "considers candidates that fit (supersedes "
+                    "--tune-budget-gb; sweep Remat policies via "
+                    "tune.SearchSpace(remat_policies=...))")
     ap.add_argument("--tune-tokens", type=int, default=None,
                     help="global tokens/step for the tuner (default: "
                     "repro.tune.DEFAULT_TOKENS)")
     args = ap.parse_args(argv)
 
     base = get_config(args.arch)
+    budget_bytes = None
+    if args.memory_budget is not None:
+        budget_bytes = int(args.memory_budget * 2**30)
+    elif args.tune_budget_gb is not None:
+        budget_bytes = int(args.tune_budget_gb * 2**30)
 
     if args.strategy:
         from repro import tune
@@ -92,6 +105,7 @@ def main(argv=None):
             print(f"strategy: {e}")
             return 2
         score = tune.score_strategy(base, strat, tokens=tokens,
+                                    budget_bytes=budget_bytes,
                                     program=(prog, sm))
         print(f"strategy[{base.name}] {strat.label()}  "
               f"step={score.step_seconds*1e3:.2f}ms  "
@@ -99,12 +113,17 @@ def main(argv=None):
               f"({prog.stats['chunks']} chunks, "
               f"{prog.stats['comms']} comms, "
               f"{prog.stats['devices']} devices)")
+        if not score.feasible:
+            print(f"strategy: estimated peak {score.peak_bytes/2**30:.2f}"
+                  f"GiB exceeds --memory-budget "
+                  f"{budget_bytes/2**30:.2f}GiB — pick a higher-Remat/"
+                  "lower-mb strategy or raise the budget")
+            return 2
 
     if args.autotune:
         from repro import tune
         mesh = tune.MeshSpec(pp=args.tune_pp, dp=args.tune_dp)
-        budget = (args.tune_budget_gb * 2**30
-                  if args.tune_budget_gb else None)
+        budget = budget_bytes
         tokens = args.tune_tokens or tune.DEFAULT_TOKENS
         try:
             plan = tune.search(base, mesh, budget, tokens=tokens)

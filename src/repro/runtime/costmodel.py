@@ -21,6 +21,7 @@ HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link (task spec: ~50 GB/s/link)
 ICI_LAT = 1e-6                  # s per hop
 DCN_BW = 25e9                   # B/s per host, cross-pod
+DMA_BW = 25e9                   # B/s host<->device (offload round-trips)
 
 
 @dataclass
@@ -29,6 +30,7 @@ class CostModel:
     hbm_bw: float = HBM_BW
     ici_bw: float = ICI_BW
     dcn_bw: float = DCN_BW
+    dma_bw: float = DMA_BW       # host DMA for d2h/h2d offload nodes
     mfu: float = 0.55            # achievable fraction of peak on chunks
     comm_latency: float = ICI_LAT
 
@@ -43,7 +45,13 @@ class CostModel:
 
     # ---------------- comm costs (size only; contention in simulator) -----
     def comm_bytes_on_wire(self, op: str, nbytes: int, group: int) -> int:
-        """Bytes each participant moves over its link."""
+        """Bytes each participant moves over its link.  d2h/h2d offload
+        round-trips move each device's shard over the host DMA link —
+        expressed in ICI-equivalent bytes so the simulator's fluid-flow
+        rate (``ici_bw`` fair-share) yields ``shard_bytes / dma_bw``."""
+        if op in ("d2h", "h2d"):
+            shard = nbytes / max(group, 1)
+            return int(shard * (self.ici_bw / self.dma_bw))
         if group <= 1:
             return 0
         n = group

@@ -314,11 +314,14 @@ class Interpreter:
                 raise KeyError(
                     f"no value for {node.short()} slot {slot} dev {t.device}")
             args.append(vals[0] if len(vals) == 1 else sum(vals[1:], vals[0]))
-        # seed/zero cotangents (bwd input slot m+j carries the cotangent of
-        # forward output j, where m = n_inputs - fwd.n_outputs)
+        # seed/zero cotangents (bwd input slot m0+j carries the cotangent
+        # of forward output j; m0 = n_inputs - n_cots, where n_cots is
+        # the forward's ORIGINAL output count — a remat-stashed forward
+        # grew extra residual outputs that carry no cotangents)
         if "fwd_node" in node.meta:
             fwd = self.dag.nodes[node.meta["fwd_node"]]
-            m0 = node.meta["n_inputs"] - fwd.n_outputs
+            n_cots = node.meta.get("n_cots", fwd.n_outputs)
+            m0 = node.meta["n_inputs"] - n_cots
             for slot in node.meta.get("seed_slots", []):
                 s = fwd.out_specs[slot - m0]
                 args[slot] = jnp.ones(s.shape, dtype=s.dtype)
@@ -464,6 +467,26 @@ class Interpreter:
                 for t in group_tasks:
                     ledgers[t.device].alloc(
                         ("fullparam", node.id, t.device), nbytes)
+        elif op in ("d2h", "h2d"):
+            # host offload round-trip: the value moves unchanged (bit
+            # identity).  d2h parks it in host RAM — the device ledger
+            # is NOT charged for its output, and releasing the input
+            # frees the device-resident activation; h2d re-charges the
+            # device at fetch time.
+            for t in group_tasks:
+                for e in self.dag.in_edges(node.id):
+                    v = store.get((e.src, e.src_out, t.device))
+                    if v is None:
+                        continue
+                    key = (node.id, 0, t.device)
+                    if cons.get(key):
+                        store[key] = v
+                        if op == "h2d" and self.track_memory:
+                            ledgers[t.device].alloc(
+                                ("act",) + key,
+                                v.size * v.dtype.itemsize)
+            for t in group_tasks:
+                self._release_inputs(node, t, store, cons, ledgers)
         elif op == "all_to_all":
             # EP a2a: numerically transparent (see class docstring);
             # move each device's value through the comm node.

@@ -120,6 +120,9 @@ def timeline_peak_bytes(prog, records) -> dict:
                 return total // len(pairs)
             return total
         k = len(n.devices or ()) or 1
+        if n.is_comm and n.meta.get("offload_static"):
+            # batch-static residual offload: a full copy per replica
+            return total
         if k > 1 and (n.meta.get("placement_mode") in
                       ("replicate", "shard_expert")
                       or (n.is_comm and n.payload == "act")):
@@ -164,7 +167,9 @@ def timeline_peak_bytes(prog, records) -> dict:
             for bname in (n.meta.get("buckets")
                           or ([bucket] if bucket else [])):
                 led.free(("fullgrad", bname))
-        if cons.get((n.id, d)):
+        if cons.get((n.id, d)) and not (n.is_comm and n.op == "d2h"):
+            # a d2h offload parks its output in host RAM — the device
+            # ledger holds nothing between stash and the h2d fetch
             led.alloc(("act", n.id), out_bytes(n))
         for e in dag.in_edges(n.id):
             key = (e.src, d)
@@ -181,13 +186,25 @@ def timeline_peak_bytes(prog, records) -> dict:
 
 def gather_param_bytes(dag, gnode) -> int:
     """Full-param bytes a (possibly fused) ZeRO-3 all-gather
-    materializes: sum over its member buckets."""
+    materializes: sum over its member buckets.
+
+    A member bucket missing from ``dag.buckets`` is an IR bug (a fusion
+    or rename pass dropped the bucket registration); silently skipping
+    it would undercount peak memory, so fail loudly instead."""
     names = gnode.meta.get("buckets")
     if not names:
         b = gnode.meta.get("bucket")
         names = [b] if b else []
-    return sum(dag.buckets[b].param_elems * WEIGHT_BYTES_PER_ELEM
-               for b in names if b in dag.buckets)
+    total = 0
+    for b in names:
+        if b not in dag.buckets:
+            raise KeyError(
+                f"all-gather node {gnode.short()} references param "
+                f"bucket {b!r} that is missing from dag.buckets "
+                f"(known: {sorted(dag.buckets)}) — peak-memory "
+                "accounting would silently undercount")
+        total += dag.buckets[b].param_elems * WEIGHT_BYTES_PER_ELEM
+    return total
 
 
 def bucket_persistent_bytes(bucket, device: int) -> int:

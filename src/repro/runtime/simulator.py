@@ -139,7 +139,10 @@ class TimelineSimulator:
                     specs[slot] = jax.ShapeDtypeStruct(shape, spec.dtype)
         if "fwd_node" in node.meta:
             fwd = self.dag.nodes[node.meta["fwd_node"]]
-            m0 = m - fwd.n_outputs
+            # n_cots = the forward's ORIGINAL output count (a remat-
+            # stashed forward grew residual outputs carrying no cots)
+            n_cots = node.meta.get("n_cots", fwd.n_outputs)
+            m0 = m - n_cots
             for slot in range(m0, m):
                 if specs[slot] is None:
                     s = fwd.out_specs[slot - m0]
@@ -153,6 +156,10 @@ class TimelineSimulator:
         group = len(node.group) if node.group else 2
         if node.op == "p2p":
             group = 2
+        if node.op in ("d2h", "h2d") and node.meta.get("offload_static"):
+            # batch-static residual (stashed weights): each replica
+            # round-trips a FULL copy, not a 1/group batch shard
+            group = 1
         return max(1.0, self.cost.comm_bytes_on_wire(
             node.op, nbytes, group))
 

@@ -19,11 +19,12 @@ from .proxy import (build_candidate_program, build_strategy_program,
                     make_chunk_cost)
 from .search import (DEFAULT_TOKENS, NoFeasiblePlanError, Plan, Score,
                      score_candidate, score_strategy, search)
-from .space import (SCHEDULE_KINDS, Candidate, MeshSpec, SearchSpace,
-                    baseline_candidate)
+from .space import (REMAT_POLICIES, SCHEDULE_KINDS, Candidate, MeshSpec,
+                    SearchSpace, baseline_candidate)
 
 __all__ = [
-    "SCHEDULE_KINDS", "DEFAULT_TOKENS", "Candidate", "MeshSpec",
+    "REMAT_POLICIES", "SCHEDULE_KINDS", "DEFAULT_TOKENS", "Candidate",
+    "MeshSpec",
     "NoFeasiblePlanError", "Plan", "PlanCache", "Score", "SearchSpace",
     "baseline_candidate", "build_candidate_program",
     "build_strategy_program", "candidate_directives",

@@ -226,18 +226,21 @@ def build_candidate_program(cfg, mesh: MeshSpec, cand: Candidate,
 def make_chunk_cost(sm: StageModel, tokens: int, n_mb: int,
                     cost: CostModel):
     """Closed-form roofline for proxy chunks: FLOPs = 2 · P_active ·
-    local_tokens, scaled per pass to match the repo's per-chunk
-    rematerialization policy (DESIGN.md §2): a joint backward re-runs
-    the forward under ``jax.vjp`` then computes both grads (3×F), and
-    the ZeroBubble Bi/Bw halves each redo the remat (2×F apiece — the
-    split's price is one extra forward).  HBM bytes = weights once +
-    ~3 boundary-sized activation tensors."""
+    local_tokens, scaled per pass to match the chunk's residual policy
+    (DESIGN.md §2/§11).  Under ``Remat(policy="full")`` — the historical
+    default — a joint backward re-runs the forward under ``jax.vjp``
+    then computes both grads (3×F), and the ZeroBubble Bi/Bw halves each
+    redo the remat (2×F apiece — the split's price is one extra
+    forward).  A remat-stashed chunk (``policy="none"``, marked
+    ``meta["remat"]``) skips the re-run: B = 2×F, Bi/Bw = 1×F each.
+    HBM bytes = weights once + ~3 boundary-sized activation tensors."""
     active = {}
     for s in range(sm.n_stages):
         active[f"stage{s}"] = sm.dense_active[s]
         if sm.expert_resident[s]:
             active[f"exp{s}"] = sm.expert_active[s]
     pass_mult = {"F": 1.0, "B": 3.0, "Bi": 2.0, "Bw": 2.0}
+    stash_mult = {"F": 1.0, "B": 2.0, "Bi": 1.0, "Bw": 1.0}
 
     def chunk_seconds(node) -> float:
         p_active = active.get(node.bucket, 0)
@@ -246,7 +249,9 @@ def make_chunk_cost(sm: StageModel, tokens: int, n_mb: int,
         if k > 1 and node.meta.get("placement_mode") in (
                 "replicate", "shard_expert"):
             t /= k
-        mult = pass_mult.get(node.dims.get("PASS", "F"), 1.0)
+        table = (stash_mult if node.meta.get("remat") == "none"
+                 else pass_mult)
+        mult = table.get(node.dims.get("PASS", "F"), 1.0)
         flops = 2.0 * p_active * t * mult
         t_c = flops / (cost.peak_flops * cost.mfu)
         bytes_ = 2.0 * p_active + 3 * 2.0 * t * sm.d_model

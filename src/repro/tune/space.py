@@ -15,12 +15,12 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
-from ..core.strategy import (SCHEDULE_KINDS, ExpertParallel, Mesh,
-                             Overlap, Pipeline, Strategy, StrategyError,
-                             ZeRO)
+from ..core.strategy import (REMAT_POLICIES, SCHEDULE_KINDS,
+                             ExpertParallel, Mesh, Overlap, Pipeline,
+                             Remat, Strategy, StrategyError, ZeRO)
 
-__all__ = ["SCHEDULE_KINDS", "Candidate", "MeshSpec", "SearchSpace",
-           "baseline_candidate"]
+__all__ = ["REMAT_POLICIES", "SCHEDULE_KINDS", "Candidate", "MeshSpec",
+           "SearchSpace", "baseline_candidate"]
 
 
 @dataclass(frozen=True)
@@ -73,13 +73,19 @@ class Candidate:
     # (0 = no fusion).
     prefetch: int = 0
     bucket_mb: int = 0
+    # activation-residual policy (core/passes.apply_remat): "full" is
+    # the historical per-chunk rematerialization; "none" stashes the vjp
+    # residuals (less backward compute, more activation memory);
+    # "selective" alternates per chunk
+    remat: str = "full"
 
     def label(self) -> str:
         return (f"{self.kind}/mb{self.n_mb}"
                 + (f"/zero{self.zero}" if self.zero else "")
                 + (f"/ep{self.ep}" if self.ep > 1 else "")
                 + (f"/pf{self.prefetch}" if self.prefetch else "")
-                + (f"/bkt{self.bucket_mb}M" if self.bucket_mb else ""))
+                + (f"/bkt{self.bucket_mb}M" if self.bucket_mb else "")
+                + (f"/rm-{self.remat}" if self.remat != "full" else ""))
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -89,7 +95,8 @@ class Candidate:
         return Candidate(kind=d["kind"], n_mb=int(d["n_mb"]),
                          zero=int(d.get("zero", 0)), ep=int(d.get("ep", 1)),
                          prefetch=int(d.get("prefetch", 0)),
-                         bucket_mb=int(d.get("bucket_mb", 0)))
+                         bucket_mb=int(d.get("bucket_mb", 0)),
+                         remat=str(d.get("remat", "full")))
 
     # -- the Strategy bridge: Candidate is a constructor over Strategy --
     def to_strategy(self, mesh) -> Strategy:
@@ -106,6 +113,8 @@ class Candidate:
         if self.prefetch > 0:
             frags.append(Overlap(prefetch=self.prefetch,
                                  bucket_mb=self.bucket_mb))
+        if self.remat != "full":
+            frags.append(Remat(policy=self.remat))
         return Strategy(m, tuple(frags))
 
     @staticmethod
@@ -118,14 +127,15 @@ class Candidate:
             raise StrategyError(
                 "cannot derive a tuner Candidate from a strategy with "
                 "no Pipeline fragment")
-        zero, ep, ov = (strategy.zero, strategy.expert_parallel,
-                        strategy.overlap)
+        zero, ep, ov, rm = (strategy.zero, strategy.expert_parallel,
+                            strategy.overlap, strategy.remat)
         return Candidate(
             kind=pipe.schedule, n_mb=pipe.n_mb,
             zero=zero.stage if zero else 0,
             ep=(ep.degree or strategy.mesh[ep.axis]) if ep else 1,
             prefetch=ov.prefetch if ov and ov.enabled else 0,
-            bucket_mb=ov.bucket_mb if ov and ov.enabled else 0)
+            bucket_mb=ov.bucket_mb if ov and ov.enabled else 0,
+            remat=rm.policy if rm else "full")
 
 
 @dataclass(frozen=True)
@@ -142,6 +152,10 @@ class SearchSpace:
     # fused-collective budget in MiB
     prefetch_depths: tuple = (1, 4)
     bucket_mbs: tuple = (0, 16)
+    # activation-residual policies; the default keeps the sweep small —
+    # open the axis with ("full", "none") or the full three-point set
+    # when tuning under --memory-budget
+    remat_policies: tuple = ("full",)
 
     def candidates(self, config, mesh: MeshSpec,
                    tokens: int) -> Iterator[Candidate]:
@@ -156,6 +170,11 @@ class SearchSpace:
             eps = (1, mesh.dp)
         else:
             eps = (1,)
+        for rm in self.remat_policies:
+            if rm not in REMAT_POLICIES:
+                raise StrategyError(
+                    f"unknown remat policy {rm!r} in search space "
+                    f"(choose from {REMAT_POLICIES})")
         for kind in self.kinds:
             for mult in sorted(set(self.mb_multipliers)):
                 n_mb = mult * mesh.pp
@@ -173,9 +192,11 @@ class SearchSpace:
                         else:
                             pts = [(0, 0)]
                         for (pf, bk) in pts:
-                            yield Candidate(kind=kind, n_mb=n_mb,
-                                            zero=zero, ep=ep,
-                                            prefetch=pf, bucket_mb=bk)
+                            for rm in self.remat_policies:
+                                yield Candidate(kind=kind, n_mb=n_mb,
+                                                zero=zero, ep=ep,
+                                                prefetch=pf, bucket_mb=bk,
+                                                remat=rm)
 
     def to_dict(self) -> dict:
         return {"kinds": list(self.kinds),
@@ -184,7 +205,8 @@ class SearchSpace:
                 "ep_degrees": (list(self.ep_degrees)
                                if self.ep_degrees is not None else None),
                 "prefetch_depths": list(self.prefetch_depths),
-                "bucket_mbs": list(self.bucket_mbs)}
+                "bucket_mbs": list(self.bucket_mbs),
+                "remat_policies": list(self.remat_policies)}
 
 
 def baseline_candidate(config, mesh: MeshSpec) -> Candidate:

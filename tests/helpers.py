@@ -2,7 +2,21 @@
 import jax
 import jax.numpy as jnp
 
+from repro.core import Overlap, RawDirectives, Strategy
+
 D = 16
+
+
+def raw_strategy(sched, split_backward=False, overlap=None):
+    """Wrap a hand-assembled directive list for the ``strategy=`` front
+    door — the supported spelling of what tests used to pass through the
+    deprecated ``compile_training(schedule=...)`` keyword.  ``overlap``
+    takes an ``OverlapConfig`` (or None for the legacy no-engine
+    plan)."""
+    frags = RawDirectives(tuple(sched), split_backward=split_backward)
+    if overlap is not None:
+        frags = frags | Overlap.from_config(overlap)
+    return Strategy(None, frags)
 
 
 def stage_fn(p, x):

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import raw_strategy
 from repro.core import (F, Order, Place, Replicate, Shard, Split,
                         compile_training)
 from repro.runtime import Interpreter
@@ -96,7 +97,8 @@ class TestPlace:
         params, x, y = setup
         sched = [Place(F(pp=0), devices=[0], stream="pp"),
                  Place(F(pp=1), devices=[1], stream="pp")]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         # p2p inserted: activation fwd (0->1) and cotangent bwd (1->0)
         p2ps = [n for n in prog.dag.comms() if n.op == "p2p"]
         assert len(p2ps) == 2
@@ -110,7 +112,8 @@ class TestReplicate:
     def test_dp_numerics(self, setup):
         params, x, y = setup
         sched = [Replicate(F(), devices=[0, 1])]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         ars = [n for n in prog.dag.comms() if n.op == "all_reduce"]
         assert len(ars) == 2  # one per bucket
         res = Interpreter(prog).run({"x": x, "y": y})
@@ -122,7 +125,8 @@ class TestReplicate:
         params, x, y = setup
         sched = [Replicate(F(), devices=[0, 1], shard_params=True,
                            shard_grads=True)]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         ags = [n for n in prog.dag.comms() if n.op == "all_gather"]
         assert len(ags) == 4  # one per chunk (2 fwd + 2 bwd), none elided
         rss = [n for n in prog.dag.comms() if n.op == "reduce_scatter"]
@@ -159,7 +163,8 @@ class TestReplicate:
                 ("zero3", {"shard_grads": True, "shard_params": True})]:
             sched = [Replicate(F(), devices=[0, 1], reduce_stream="dp",
                                gather_stream="ag", **kw)]
-            prog = compile_training(fwd, params, INPUTS, sched)
+            prog = compile_training(fwd, params, INPUTS,
+                                    strategy=raw_strategy(sched))
             res = Interpreter(prog).run({"x": x, "y": y})
             peaks[name] = res.max_peak()
         assert peaks["zero2"] < peaks["zero1"]
@@ -170,7 +175,8 @@ class TestSplit:
     def test_microbatch_numerics(self, setup):
         params, x, y = setup
         sched = [Split(F(), dim="MB", num_microbatches=2)]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         assert len(prog.dag.chunks()) == 8
         res = Interpreter(prog).run({"x": x, "y": y})
         l, g = oracle(params, x, y)
@@ -181,7 +187,8 @@ class TestSplit:
         params, x, y = setup
         sched = [Replicate(F(), devices=[0, 1]),
                  Split(F(), dim="MB", num_microbatches=2)]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         # per-MB all-reduces merged into one accumulated AR per bucket
         ars = [n for n in prog.dag.comms() if n.op == "all_reduce"]
         assert len(ars) == 2
@@ -204,7 +211,8 @@ class TestOrderAndPipeline:
             Order([F(pp=0, MB=0, PASS="F"), F(pp=0, MB=1, PASS="F"),
                    F(pp=0, MB=0, PASS="B"), F(pp=0, MB=1, PASS="B")]),
         ]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         res = Interpreter(prog).run({"x": x, "y": y})
         l, g = oracle(params, x, y)
         assert res.loss == pytest.approx(l, abs=1e-6)
@@ -218,7 +226,8 @@ class TestOrderAndPipeline:
                    [F(MB=1, PASS="F"), F(MB=0, PASS="B")],
                    F(MB=1, PASS="B")]),
         ]
-        prog = compile_training(two_stage_forward, params, INPUTS, sched)
+        prog = compile_training(two_stage_forward, params, INPUTS,
+                                strategy=raw_strategy(sched))
         res = Interpreter(prog).run({"x": x, "y": y})
         l, _ = oracle(params, x, y)
         assert res.loss == pytest.approx(l, abs=1e-6)
@@ -253,7 +262,8 @@ class TestShardEP:
             Replicate(F(ep="-"), devices=[0, 1], reduce_stream="dp"),
             Shard(F(ep="*"), devices=[0, 1], stream="ep"),
         ]
-        prog = compile_training(moe_forward, p3, INPUTS, sched)
+        prog = compile_training(moe_forward, p3, INPUTS,
+                                strategy=raw_strategy(sched))
         a2as = [n for n in prog.dag.comms() if n.op == "all_to_all"]
         assert len(a2as) >= 4  # in/out x fwd/bwd
         res = Interpreter(prog).run({"x": x, "y": y})

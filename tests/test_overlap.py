@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from helpers import (assert_grads_close, inputs_spec, make_batch,
-                     make_mlp_forward, make_mlp_params, mlp_oracle)
+                     make_mlp_forward, make_mlp_params, mlp_oracle,
+                     raw_strategy)
 from repro.core import F, OverlapConfig, Replicate, compile_training
 from repro.core.schedules import (build_rank_sequences, emit_directives,
                                   rank_of_stage)
@@ -37,9 +38,10 @@ def build_zero_prog(kind="1f1b", R=2, n_mb=N_MB, dp=2, zero=3,
                        shard_grads=zero >= 2, shard_params=zero >= 3)
              for s in range(S)]
     sched = sched[:S] + extra + sched[S:]
-    prog = compile_training(fwd, params, inputs_spec(batch), sched,
-                            split_backward=(kind == "dualpipev"),
-                            overlap=overlap)
+    prog = compile_training(
+        fwd, params, inputs_spec(batch), strategy=raw_strategy(
+            sched, split_backward=(kind == "dualpipev"),
+            overlap=overlap))
     return prog, params
 
 

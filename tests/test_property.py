@@ -18,7 +18,8 @@ hypothesis = pytest.importorskip(
 from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from helpers import (assert_grads_close, inputs_spec, make_batch,
-                     make_mlp_forward, make_mlp_params, mlp_oracle)
+                     make_mlp_forward, make_mlp_params, mlp_oracle,
+                     raw_strategy)
 from repro.core import F, Order, Place, Replicate, Split, compile_training
 from repro.core.dag import Node
 from repro.core.schedules import PipeOp, build_rank_sequences
@@ -121,7 +122,8 @@ class TestRandomStrategyNumerics:
                     shard_grads=zero >= 2, shard_params=zero >= 3))
         if n_mb > 1:
             sched.append(Split(F(), dim="MB", num_microbatches=n_mb))
-        prog = compile_training(fwd, params, inputs_spec(batch), sched)
+        prog = compile_training(fwd, params, inputs_spec(batch),
+                                strategy=raw_strategy(sched))
         b = make_batch(batch)
         res = Interpreter(prog).run(b)
         l, g = mlp_oracle(params, b["x"], b["y"], S)

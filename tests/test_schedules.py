@@ -5,7 +5,8 @@ import jax
 import pytest
 
 from helpers import (assert_grads_close, inputs_spec, make_batch,
-                     make_mlp_forward, make_mlp_params, mlp_oracle)
+                     make_mlp_forward, make_mlp_params, mlp_oracle,
+                     raw_strategy)
 from repro.core import (F, Order, Place, Replicate, ScheduleRejected, Split,
                         compile_training)
 from repro.core.schedules import (PipeOp, build_rank_sequences,
@@ -71,8 +72,9 @@ class TestEndToEnd:
         sched = emit_directives(kind, seqs,
                                 device_groups=[[r] for r in range(R)],
                                 n_stages=S)
-        prog = compile_training(fwd, params, inputs_spec(BATCH), sched,
-                                split_backward=split)
+        prog = compile_training(fwd, params, inputs_spec(BATCH),
+                                strategy=raw_strategy(
+                                    sched, split_backward=split))
         batch = make_batch(BATCH)
         res = Interpreter(prog).run(batch)
         l, g = mlp_oracle(params, batch["x"], batch["y"], S)
@@ -92,7 +94,8 @@ class TestEndToEnd:
             Replicate(F(pp=0), devices=[0, 2], reduce_stream="dp"),
             Replicate(F(pp=1), devices=[1, 3], reduce_stream="dp"),
         ] + sched[S:]
-        prog = compile_training(fwd, params, inputs_spec(BATCH), sched)
+        prog = compile_training(fwd, params, inputs_spec(BATCH),
+                                strategy=raw_strategy(sched))
         assert len(prog.plan.devices) == 4
         batch = make_batch(BATCH)
         res = Interpreter(prog).run(batch)
@@ -112,7 +115,8 @@ class TestEndToEnd:
             sched = emit_directives(kind, seqs,
                                     device_groups=[[r] for r in range(R)],
                                     n_stages=R)
-            prog = compile_training(fwd, params, inputs_spec(32), sched)
+            prog = compile_training(fwd, params, inputs_spec(32),
+                                    strategy=raw_strategy(sched))
             res = Interpreter(prog).run(make_batch(32))
             peaks[kind] = res.ledgers[0].peak  # stage-0 device peak
         assert peaks["1f1b"] < peaks["gpipe"]
@@ -136,7 +140,8 @@ class TestRejection:
             # stage 1 consumes mb1 first — legal: recvs follow suit
             Order([F(pp=1, MB=1, PASS="F"), F(pp=1, MB=0, PASS="F")]),
         ]
-        prog = compile_training(fwd, params, inputs_spec(BATCH), sched)
+        prog = compile_training(fwd, params, inputs_spec(BATCH),
+                                strategy=raw_strategy(sched))
         res = Interpreter(prog).run(make_batch(BATCH))
         l, _ = mlp_oracle(params, make_batch(BATCH)["x"],
                           make_batch(BATCH)["y"], S)
@@ -239,7 +244,8 @@ class TestRejection:
         fwd = make_mlp_forward(S)
         sched = [Order([F(pp=1, PASS="F"), F(pp=0, PASS="F")])]
         with pytest.raises((ValueError, ScheduleRejected)):
-            compile_training(fwd, params, inputs_spec(BATCH), sched)
+            compile_training(fwd, params, inputs_spec(BATCH),
+                             strategy=raw_strategy(sched))
 
 
 class TestZeroBubble:
@@ -252,8 +258,9 @@ class TestZeroBubble:
         sched = emit_directives("zb1f1b", seqs,
                                 device_groups=[[r] for r in range(R)],
                                 n_stages=S)
-        prog = compile_training(fwd, params, inputs_spec(BATCH), sched,
-                                split_backward=True)
+        prog = compile_training(fwd, params, inputs_spec(BATCH),
+                                strategy=raw_strategy(
+                                    sched, split_backward=True))
         batch = make_batch(BATCH)
         res = Interpreter(prog).run(batch)
         l, g = mlp_oracle(params, batch["x"], batch["y"], S)
@@ -274,8 +281,9 @@ class TestZeroBubble:
             sched = emit_directives(kind, seqs,
                                     device_groups=[[r] for r in range(R)],
                                     n_stages=S)
-            prog = compile_training(fwd, params, inputs_spec(32), sched,
-                                    split_backward=(kind == "zb1f1b"))
+            prog = compile_training(
+                fwd, params, inputs_spec(32), strategy=raw_strategy(
+                    sched, split_backward=(kind == "zb1f1b")))
             cost = CostModel(ici_bw=1e12, comm_latency=0.0)
             res = TimelineSimulator(
                 prog, cost,

@@ -6,7 +6,7 @@ import jax
 import pytest
 
 from helpers import (inputs_spec, make_mlp_forward, make_mlp_params,
-                     make_moe_forward)
+                     make_moe_forward, raw_strategy)
 from repro.core import F, Replicate, Shard, compile_training
 from repro.core.schedules import build_rank_sequences, emit_directives
 from repro.runtime.costmodel import CostModel
@@ -37,7 +37,8 @@ def build_prog(kind, R, n_mb, forward_factory, n_stage, extra=None,
                             n_stages=n_stage)
     if extra:
         sched = sched[:n_stage] + extra + sched[n_stage:]
-    return compile_training(fwd, params, inputs_spec(batch), sched), params
+    return compile_training(fwd, params, inputs_spec(batch),
+                            strategy=raw_strategy(sched)), params
 
 
 class TestMakespan:
@@ -74,7 +75,8 @@ class TestStreamOverlap:
         spans = {}
         for name, stream in [("same", None), ("separate", "dp")]:
             sched = [Replicate(F(), devices=[0, 1], reduce_stream=stream)]
-            prog = compile_training(fwd, params, inputs_spec(BATCH), sched)
+            prog = compile_training(fwd, params, inputs_spec(BATCH),
+                                    strategy=raw_strategy(sched))
             # big grads so the ARs are comparable to compute time
             cost = CostModel(ici_bw=2e5, comm_latency=0.0)
             res = TimelineSimulator(
@@ -110,8 +112,9 @@ class TestDualPipeV:
                 extra.append(Shard(F(**{"pp": s, "ep": "*"}), devices=g,
                                    stream="ep"))
         sched = sched[:S] + extra + sched[S:]
-        prog = compile_training(fwd, params, inputs_spec(BATCH), sched,
-                                split_backward=(kind == "dualpipev"))
+        prog = compile_training(
+            fwd, params, inputs_spec(BATCH), strategy=raw_strategy(
+                sched, split_backward=(kind == "dualpipev")))
         cost = CostModel(ici_bw=ici_bw, comm_latency=0.0)
         return TimelineSimulator(prog, cost,
                                  chunk_seconds_override=const_cost).run()

@@ -17,7 +17,7 @@ from repro.core.schedules import (build_rank_sequences, emit_directives,
 from repro.tune.space import SCHEDULE_KINDS, Candidate, MeshSpec
 
 from helpers import (inputs_spec, make_batch, make_mlp_params,
-                     make_moe_forward, mlp_oracle)
+                     make_moe_forward, mlp_oracle, raw_strategy)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -165,9 +165,15 @@ class TestJson:
             assert Strategy.from_json(back.to_json()).to_json() == doc
 
     def test_unknown_schema_version_rejected(self):
+        from repro.core import SCHEMA_VERSION
         doc = _sample_strategies()[0].to_json()
-        for bad in ('"schema":0', '"schema":2', '"schema":"1"'):
-            mutated = doc.replace('"schema":1', bad)
+        cur = f'"schema":{SCHEMA_VERSION}'
+        assert cur in doc
+        for bad in (f'"schema":{SCHEMA_VERSION - 1}',
+                    f'"schema":{SCHEMA_VERSION + 1}',
+                    f'"schema":"{SCHEMA_VERSION}"'):
+            mutated = doc.replace(cur, bad)
+            assert mutated != doc
             with pytest.raises(StrategyError, match="schema version"):
                 Strategy.from_json(mutated)
 
@@ -257,8 +263,10 @@ class TestLoweringParity:
         params = _moe_params()
         fwd = make_moe_forward(S)
         legacy = compile_training(
-            fwd, params, inputs_spec(BATCH), _legacy_schedule(kind),
-            split_backward=kind in ("dualpipev", "zb1f1b"))
+            fwd, params, inputs_spec(BATCH),
+            strategy=raw_strategy(
+                _legacy_schedule(kind),
+                split_backward=kind in ("dualpipev", "zb1f1b")))
         strat = Strategy(Mesh(pp=R, dp=DP),
                          Pipeline(kind, n_mb=N_MB) | ZeRO(stage=3)
                          | ExpertParallel())
@@ -272,8 +280,9 @@ class TestLoweringParity:
         the ZeRO fragment exactly like the legacy elif branch."""
         params = _moe_params()
         fwd = make_moe_forward(S)
-        legacy = compile_training(fwd, params, inputs_spec(BATCH),
-                                  _legacy_schedule("1f1b", ep=False))
+        legacy = compile_training(
+            fwd, params, inputs_spec(BATCH),
+            strategy=raw_strategy(_legacy_schedule("1f1b", ep=False)))
         strat = Strategy(Mesh(pp=R, dp=DP),
                          Pipeline("1f1b", n_mb=N_MB) | ZeRO(stage=3))
         new = compile_training(fwd, params, inputs_spec(BATCH),
@@ -363,7 +372,8 @@ class TestDirectiveErrors:
         ]
         with pytest.raises(ValueError, match="Order after Split|after"):
             compile_training(make_mlp_forward(S), params,
-                             inputs_spec(BATCH), bad)
+                             inputs_spec(BATCH),
+                             strategy=raw_strategy(bad))
 
 
 # ---------------------------------------------------------------------------
@@ -400,5 +410,5 @@ class TestCandidateBridge:
             make_proxy_forward(sm), make_proxy_params(sm),
             {"x": ((tokens, sm.d_model), "bfloat16"),
              "y": ((tokens, sm.d_model), "bfloat16")},
-            sched, split_backward=False)
+            strategy=raw_strategy(sched))
         assert _device_sequences(prog) == _device_sequences(legacy)
