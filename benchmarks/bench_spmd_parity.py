@@ -1,0 +1,116 @@
+"""Measured-vs-predicted step times for the SPMD plan executor.
+
+For each (schedule x ZeRO x remat) cell: compile the Piper-IR program,
+predict its step time on the timeline simulator (v5e CostModel, XLA
+chunk cost analysis), execute it for REAL on faked host XLA devices via
+``runtime.spmd.SpmdExecutor``, assert loss/grad bit-parity against the
+reference interpreter, and record the measured/predicted ratio.  The
+per-cell table + the ``tune.calibrate`` summary (median ratio folded
+into the cost model's mfu, dispersion = honest simulator error bar on
+this host) land in ``benchmarks/results/spmd/spmd_parity.json``.
+
+Host-harness caveat (DESIGN.md §12): host cores are not v5e chips, so
+the ABSOLUTE ratio is machine-specific and never CI-gated; only the
+deterministic simulated headline ratios are (benchmarks/smoke.py).
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.bench_spmd_parity [--smoke]
+(fakes its own host devices before jax initializes; --smoke drops to
+1 measurement rep — what the bench-smoke CI job runs)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "spmd"
+
+# (schedule, zero, remat) cells; pp2 x dp2 = 4 devices keeps the
+# host-device fan-out and compile times CI-friendly
+CELLS = [
+    ("1f1b", 1, "full"),
+    ("1f1b", 3, "full"),
+    ("gpipe", 3, "full"),
+    ("dualpipev", 1, "none"),
+]
+PP, MB, BATCH = 2, 4, 32
+
+
+def main(smoke: bool = False) -> None:
+    import jax
+    import numpy as np
+
+    n_dev = 2 * PP
+    if len(jax.devices()) < n_dev:
+        print(f"# bench_spmd_parity SKIPPED: needs {n_dev} XLA devices, "
+              f"have {len(jax.devices())} (run standalone: PYTHONPATH=src "
+              "python -m benchmarks.bench_spmd_parity)")
+        return
+
+    from repro import tune
+    from repro.core import Remat
+    from repro.runtime import Interpreter
+    from repro.runtime.costmodel import CostModel
+    from repro.runtime.simulator import TimelineSimulator
+    from repro.runtime.spmd import SpmdExecutor
+
+    from .common import D, build_pp_program, emit
+
+    cost = CostModel()
+    reps = 1 if smoke else 3
+    cells, rows, parity_all = [], [], True
+    for (kind, zero, rm) in CELLS:
+        label = f"{kind}/z{zero}/rm-{rm}"
+        prog, params = build_pp_program(
+            kind, PP, MB, BATCH, dp_per_rank=2, zero=zero,
+            remat=Remat(policy=rm) if rm != "full" else None)
+        batch = {
+            "x": jax.random.normal(jax.random.PRNGKey(1), (BATCH, D)),
+            "y": jax.random.normal(jax.random.PRNGKey(2), (BATCH, D))}
+        predicted = TimelineSimulator(prog, cost).run().makespan
+        ex = SpmdExecutor(prog)
+        got = ex.run(batch)
+        ref = Interpreter(prog).run(batch)
+        parity = np.float64(ref.loss).tobytes() == \
+            np.float64(got.loss).tobytes()
+        for bkt in ref.grads:
+            leaves_r = jax.tree_util.tree_leaves(ref.grads[bkt])
+            leaves_g = jax.tree_util.tree_leaves(got.grads[bkt])
+            parity = parity and len(leaves_r) == len(leaves_g) and all(
+                np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                for a, b in zip(leaves_r, leaves_g))
+        parity_all = parity_all and parity
+        measured = ex.measure(batch, reps=reps)
+        cell = tune.MeasuredCell(label=label, predicted_seconds=predicted,
+                                 measured_seconds=measured)
+        cells.append(cell)
+        rows.append({**cell.to_dict(), "parity": bool(parity),
+                     "tasks": got.stats["tasks"]})
+        emit(f"spmd_parity[{label}]", measured * 1e6,
+             f"pred={predicted*1e3:.2f}ms ratio={cell.ratio:.1f} "
+             f"parity={'OK' if parity else 'FAIL'}")
+
+    cal = tune.calibrate(cost, cells)
+    emit("spmd_calibration", 0.0,
+         f"scale={cal.scale:.1f} dispersion={cal.dispersion:.2f} "
+         f"mfu={cal.cost.mfu:.2e}")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = {"cells": rows, "calibration": cal.to_dict(),
+           "parity_all": bool(parity_all),
+           "mesh": {"pp": PP, "dp": 2}, "n_mb": MB, "batch": BATCH,
+           "note": "measured on faked host devices; ratios are "
+                   "calibration inputs, not absolute perf claims"}
+    path = RESULTS / "spmd_parity.json"
+    path.write_text(json.dumps(out, indent=1))
+    print(f"# results -> {path}")
+    if not parity_all:
+        raise AssertionError("spmd/interpreter bit-parity FAILED")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "src"))
+    from repro.launch.hostdevices import ensure_host_devices
+    ensure_host_devices(2 * PP, verify=False)
+    main(smoke="--smoke" in sys.argv[1:])

@@ -1,0 +1,58 @@
+"""Diff fresh smoke headlines against the committed baseline (CI job
+``bench-smoke``): a simulated-perf regression beyond the tolerance
+fails the PR instead of rotting silently.
+
+  python benchmarks/check_smoke.py FRESH.json [BASELINE.json]
+
+Exit 0 when every headline ratio is within the baseline's tolerance
+(default ±15%, relative); exit 1 with a per-headline report otherwise.
+Headline sets must match exactly — adding a headline means refreshing
+the committed baseline in the same PR (see benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "results" / "smoke" / \
+    "headline.json"
+
+
+def check(fresh_path, baseline_path=DEFAULT_BASELINE) -> int:
+    fresh = json.loads(pathlib.Path(fresh_path).read_text())
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    tol = float(base.get("tolerance", 0.15))
+    fh, bh = fresh["headlines"], base["headlines"]
+    failures = []
+    if set(fh) != set(bh):
+        failures.append(f"headline sets differ: fresh={sorted(fh)} "
+                        f"baseline={sorted(bh)} — refresh the baseline "
+                        "(python -m benchmarks.run --smoke) and commit it")
+    for k in sorted(set(fh) & set(bh)):
+        f, b = float(fh[k]), float(bh[k])
+        rel = abs(f - b) / max(abs(b), 1e-12)
+        status = "ok" if rel <= tol else "DRIFT"
+        print(f"{k}: baseline={b:.4f} fresh={f:.4f} "
+              f"rel={rel*100:.1f}% [{status}]")
+        if rel > tol:
+            failures.append(
+                f"{k} drifted {rel*100:.1f}% (> {tol*100:.0f}%): "
+                f"baseline {b:.4f} -> fresh {f:.4f}")
+    if failures:
+        print("\nbench-smoke FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        print("(intentional perf change? refresh the baseline: "
+              "PYTHONPATH=src python -m benchmarks.run --smoke, "
+              "commit results/smoke/headline.json)")
+        return 1
+    print("bench-smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(check(sys.argv[1], *(sys.argv[2:3] or [DEFAULT_BASELINE])))

@@ -3,22 +3,49 @@ Prints ``name,us_per_call,derived`` CSV lines.  Every Piper-IR program
 the sections compile goes through the declarative Strategy API
 (``common.build_pp_strategy`` / ``tune.candidate_strategy``).
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI headline
+      ratios only (tiny shapes, 1 rep, deterministic) — optionally
+      --smoke-out PATH to write the fresh headline JSON elsewhere
+      (the bench-smoke CI job diffs it against the committed baseline
+      via benchmarks/check_smoke.py)
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="compute only the deterministic headline "
+                    "ratios (benchmarks/smoke.py): tiny shapes, 1 rep")
+    ap.add_argument("--smoke-out", default=None, metavar="PATH",
+                    help="where --smoke writes the fresh headline JSON "
+                    "(default: refresh the committed baseline in "
+                    "results/smoke/)")
+    args = ap.parse_args(argv)
+
+    # the spmd parity section needs real (faked-host) XLA devices; the
+    # flag must be set before jax's backend first initializes.  Extra
+    # host devices are inert for the simulator/interpreter sections.
+    from repro.launch.hostdevices import ensure_host_devices
+    ensure_host_devices(4, verify=False)
+
     import jax
     jax.config.update("jax_platform_name", "cpu")
-    sections = []
+
+    if args.smoke:
+        from . import smoke
+        smoke.main(args.smoke_out)
+        return
+
     from . import (bench_kernels, bench_overlap, bench_parity,
                    bench_pp_schedules, bench_pp_zero, bench_remat,
-                   bench_scaling)
+                   bench_scaling, bench_spmd_parity)
     sections = [
         ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
          bench_pp_schedules.main),
@@ -26,6 +53,8 @@ def main() -> None:
          bench_overlap.main),
         ("PR4: Remat/Offload memory-throughput frontier",
          bench_remat.main),
+        ("PR5: SPMD executor measured-vs-predicted + bit-parity",
+         bench_spmd_parity.main),
         ("Table1+Fig8: PP x ZeRO support + peak memory",
          bench_pp_zero.main),
         ("Table2: DP ZeRO-1 parity + dispatch overhead",

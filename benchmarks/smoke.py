@@ -1,0 +1,96 @@
+"""CI smoke bench: deterministic headline speedup ratios, tiny shapes,
+one rep (``python -m benchmarks.run --smoke``).
+
+The full bench suite takes minutes and its committed results rot
+silently: nothing failed a PR that quietly halved the overlap engine's
+speedup.  This module recomputes the HEADLINE RATIOS through the same
+machinery the real benches use — ArchConfig proxy programs, the
+analytic chunk roofline (``tune.make_chunk_cost``) and the timeline
+simulator, so every number is bit-deterministic across hosts — and
+``check_smoke.py`` diffs them against the committed baseline with a
+±15% tolerance in CI (job ``bench-smoke``).
+
+Headlines (all dimensionless step-time ratios, qwen3-1b proxy):
+  overlap_speedup_1f1b       ZeRO-3 overlap engine off / on, 1f1b
+  overlap_speedup_dualpipev  ZeRO-3 overlap engine off / on, dualpipev
+  remat_speedup              remat full / none (stash), 1f1b
+  microbatch_bubble_ratio    1f1b mb=2 / mb=16 (the pipeline-bubble
+                             fraction the schedule amortizes)
+
+Measured SPMD wall-clock is deliberately NOT here — it is
+machine-specific and lives un-gated in results/spmd/ (see
+bench_spmd_parity.py).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+BASELINE = pathlib.Path(__file__).parent / "results" / "smoke" / \
+    "headline.json"
+
+CONFIG = "qwen3-1b"
+TOKENS = 16384   # tiny: smoke runs in seconds, not the bench's minutes
+
+
+def _step_seconds(cand, mesh, overlap) -> float:
+    from repro.configs import get_config
+    from repro.runtime.costmodel import CostModel
+    from repro.runtime.simulator import TimelineSimulator
+    from repro.tune.proxy import build_candidate_program, make_chunk_cost
+
+    cfg = get_config(CONFIG)
+    prog, sm = build_candidate_program(cfg, mesh, cand, TOKENS,
+                                       overlap=overlap)
+    cost = CostModel()
+    return TimelineSimulator(
+        prog, cost, chunk_seconds_override=make_chunk_cost(
+            sm, TOKENS, cand.n_mb, cost)).run().makespan
+
+
+def compute_headlines() -> dict:
+    from repro.core import OverlapConfig
+    from repro.tune import Candidate, MeshSpec
+
+    on = OverlapConfig(bucket_bytes=256 << 20, prefetch=4)
+    off = OverlapConfig.off()
+    z3 = MeshSpec(pp=2, dp=2)
+    pp = MeshSpec(pp=2, dp=1)
+
+    def span(kind, zero=3, mesh=z3, overlap=off, remat="full"):
+        return _step_seconds(
+            Candidate(kind=kind, n_mb=2 * mesh.pp, zero=zero,
+                      remat=remat), mesh, overlap)
+
+    return {
+        "overlap_speedup_1f1b":
+            span("1f1b") / span("1f1b", overlap=on),
+        "overlap_speedup_dualpipev":
+            span("dualpipev") / span("dualpipev", overlap=on),
+        "remat_speedup":
+            span("1f1b", zero=0, mesh=pp)
+            / span("1f1b", zero=0, mesh=pp, remat="none"),
+        "microbatch_bubble_ratio":
+            _step_seconds(Candidate(kind="1f1b", n_mb=2, zero=0), pp, off)
+            / _step_seconds(Candidate(kind="1f1b", n_mb=16, zero=0),
+                            pp, off),
+    }
+
+
+def main(out_path: pathlib.Path | str | None = None) -> dict:
+    headlines = compute_headlines()
+    doc = {"headlines": headlines,
+           "config": {"arch": CONFIG, "tokens": TOKENS},
+           "tolerance": 0.15}
+    path = pathlib.Path(out_path) if out_path else BASELINE
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    for k, v in sorted(headlines.items()):
+        print(f"smoke[{k}],0.0,{v:.4f}")
+    print(f"# smoke headlines -> {path}")
+    return doc
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -33,6 +33,27 @@ class CompiledProgram:
     strategy: Optional[Strategy] = None
     stats: dict[str, Any] = field(default_factory=dict)
 
+    def input_shapes(self) -> dict[str, tuple[tuple[int, ...], str]]:
+        """Static base (pre-``Split``) graph-input shapes the runtime
+        feeds: ``{name: (shape, dtype)}``.  Microbatched inputs report
+        their unsplit leading dim — exactly what a ``run(batch)`` caller
+        must supply.  The SPMD executor's schedule replay and the
+        ``--backend`` drivers build batches from this."""
+        dag = self.dag
+        mb = dag.meta.get("microbatch_inputs", {})
+        sub_names = {sub for info in mb.values() for sub in info["names"]}
+        out: dict[str, tuple[tuple[int, ...], str]] = {}
+        for name, (spec, _consumers) in dag.inputs.items():
+            if name in sub_names:
+                continue
+            out[name] = (tuple(spec.shape), str(spec.dtype))
+        for base, info in mb.items():
+            spec, _ = dag.inputs[info["names"][0]]
+            shape = ((spec.shape[0] * info["k"],) + tuple(spec.shape[1:])
+                     if spec.shape else spec.shape)
+            out[base] = (tuple(shape), str(spec.dtype))
+        return out
+
 
 def compile_training(
     forward: Callable[[Recorder, dict], Any],

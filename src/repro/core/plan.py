@@ -54,6 +54,13 @@ class GlobalPlan:
     device_plans: dict[int, DevicePlan]
     priorities: dict[int, int]          # node -> #descendants
     devices: list[int]
+    # the centralized scheduler's global dispatch order over nodes — one
+    # deterministic linear extension that every per-(device, stream)
+    # queue is a subsequence of.  ``rank_program`` slices it per rank
+    # for inspection/debugging; the SPMD executor's trace order is the
+    # *dynamic* analogue (``runtime.interpreter.replay_schedule``),
+    # which additionally reflects the gather rate limiter.
+    node_order: list[int] = field(default_factory=list)
 
     def plan_for(self, device: int) -> DevicePlan:
         return self.device_plans[device]
@@ -63,6 +70,22 @@ class GlobalPlan:
         for p in self.device_plans.values():
             out.extend(p.tasks.values())
         return out
+
+    def rank_program(self, device: int) -> list[Task]:
+        """Per-rank program extraction: this device's tasks in the
+        scheduler's global dispatch order — the chunk/comm sequence a
+        per-rank (MPMD-style) executor would run; every stream queue in
+        ``device_plans[device].streams`` is a subsequence of it.
+        (tests/test_spmd_executor.py asserts that invariant.)"""
+        p = self.device_plans[device]
+        if not self.node_order:
+            return list(p.tasks.values())
+        pos = {nid: i for i, nid in enumerate(self.node_order)}
+        role_rank = {ROLE_COLL: 0, ROLE_COMPUTE: 1, ROLE_SEND: 2,
+                     ROLE_RECV: 3}
+        return sorted(p.tasks.values(),
+                      key=lambda t: (pos.get(t.node, len(pos)),
+                                     role_rank.get(t.role, 9)))
 
     def summary(self) -> str:
         lines = []

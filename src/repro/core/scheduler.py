@@ -215,7 +215,8 @@ def build_plan(dag: TrainingDAG) -> GlobalPlan:
             t.deps = [k for k in deps
                       if not (k in seen or seen.add(k)) and k != t.key]
 
-    plan = GlobalPlan(device_plans=plans, priorities=prio, devices=devices)
+    plan = GlobalPlan(device_plans=plans, priorities=prio, devices=devices,
+                      node_order=list(sched_order))
     validate_comm_order(dag, plan)
     return plan
 

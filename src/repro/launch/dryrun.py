@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
 """Multi-pod dry-run (task spec: MULTI-POD DRY-RUN).
 
 For each (architecture x input shape x mesh) cell:
@@ -15,9 +12,13 @@ Run a single cell:
 Run everything (sequentially, caching into benchmarks/results/dryrun):
   PYTHONPATH=src python -m repro.launch.dryrun --all
 
-NOTE the XLA_FLAGS line above MUST precede any jax import: jax locks the
-device count at first init.  Smoke tests / benches import jax without
-this module and see 1 device.
+Device-count note: the 512 faked host devices the pod meshes need are
+requested via ``hostdevices.ensure_host_devices`` — ONLY when this
+module runs as ``__main__`` (the guard below executes before the jax
+import, which is what locks the count at first backend init).
+Importing ``dryrun`` for its roofline helpers no longer mutates
+``XLA_FLAGS`` in the importing process (smoke tests / benches keep
+their own device count).
 """
 import argparse
 import json
@@ -25,6 +26,11 @@ import pathlib
 import sys
 import time
 import traceback
+
+from repro.launch.hostdevices import ensure_host_devices
+
+if __name__ == "__main__":  # before the jax import locks device count
+    ensure_host_devices(512, verify=False)
 
 import jax
 
@@ -135,7 +141,11 @@ def probe_metrics(cfg, mesh, strat, shape) -> dict:
 
 def run_cell(arch: str, shape: str, mesh_name: str,
              zero_stage: int = 3, strategy_kw=None, cfg_kw=None,
-             probe: bool = True) -> dict:
+             probe: bool = True, core_strategy=None) -> dict:
+    """``core_strategy``: a first-class ``core.strategy.Strategy``
+    driving the SPMD sharding derivation (ZeRO stage, EP dispatch,
+    remat) — the same document the Piper-IR backends replay; the bare
+    ``zero_stage`` spelling remains for CLI sweeps."""
     import dataclasses
     cfg0 = get_config(arch)
     status = cell_status(cfg0, shape)
@@ -149,8 +159,9 @@ def run_cell(arch: str, shape: str, mesh_name: str,
         cfg = dataclasses.replace(cfg, **cfg_kw)
     mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
     chips = mesh.devices.size
-    strat = strategy_for(mesh, zero_stage=zero_stage,
+    strat = strategy_for(mesh, zero_stage=zero_stage, core=core_strategy,
                          **(strategy_kw or {}))
+    out["zero_stage"] = strat.zero_stage
     t0 = time.time()
     lowered = lower_cell(cfg, mesh, strat, shape)
     t1 = time.time()
@@ -253,18 +264,18 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     strategy_doc = None
+    core_strategy = None
     if args.strategy:
         from repro.core.strategy import Strategy, StrategyError
         try:
-            strat = Strategy.from_json(
+            core_strategy = Strategy.from_json(
                 pathlib.Path(args.strategy).read_text())
         except (StrategyError, OSError) as e:
             print(f"strategy: {e}")
             return 2
-        if strat.zero is not None:
-            args.zero = strat.zero.stage
-        strategy_doc = strat.to_dict()
-        print(f"strategy: {strat.label()} -> zero_stage={args.zero}")
+        strategy_doc = core_strategy.to_dict()
+        print(f"strategy: {core_strategy.label()} (drives ZeRO/EP/remat; "
+              "CLI flags cover attn/seq)")
 
     cells = []
     if args.all:
@@ -288,14 +299,18 @@ def main(argv=None) -> int:
         print(f"[run] {key} ...", flush=True)
         try:
             strategy_kw = {"attn_mode": args.attn_mode,
-                           "moe_impl": args.moe,
                            "seq_axis": (None if args.seq_axis == "none"
                                         else args.seq_axis)}
+            if core_strategy is None:
+                # --moe only applies without a strategy doc (the doc's
+                # ExpertParallel fragment decides the dispatch impl)
+                strategy_kw["moe_impl"] = args.moe
             cfg_kw = {"remat": args.remat, "loss_chunk": args.loss_chunk,
                       "ssm_chunk": args.ssm_chunk}
             res = run_cell(arch, shape, mesh, zero_stage=args.zero,
                            strategy_kw=strategy_kw, cfg_kw=cfg_kw,
-                           probe=not args.no_probe)
+                           probe=not args.no_probe,
+                           core_strategy=core_strategy)
             if strategy_doc is not None:
                 res["strategy_doc"] = strategy_doc
             if args.tag:

@@ -17,7 +17,6 @@ from ..optim import adamw_update
 from ..parallel.sharding import (Strategy, batch_shardings,
                                  cache_shardings, opt_state_shardings,
                                  params_shardings)
-from .mesh import dp_axes_for
 from .specs import batch_specs, cache_specs, params_specs, state_specs
 
 
@@ -30,8 +29,25 @@ def _logits_sharding(mesh: Mesh, strat: Strategy, batch: int):
     return NamedSharding(mesh, P(ax, None, None))
 
 
-def strategy_for(mesh: Mesh, zero_stage: int = 3, **kw) -> Strategy:
-    return Strategy(dp_axes=dp_axes_for(mesh), zero_stage=zero_stage, **kw)
+def strategy_for(mesh: Mesh, zero_stage: int = 3, core=None,
+                 **kw) -> Strategy:
+    """The pjit step builders' sharding rules, derived from ONE source
+    of truth: a first-class ``core.strategy.Strategy``.  Pass ``core=``
+    to drive the lowering from a declarative strategy document (the
+    same JSON ``--strategy`` replays through the Piper-IR backends);
+    the legacy ``zero_stage=`` spelling builds the equivalent ZeRO
+    fragment and routes through the same derivation.  ``kw`` overrides
+    pass through (``attn_mode``, ``seq_axis``, ``moe_impl``, ...)."""
+    if core is None:
+        from ..core.strategy import Strategy as CoreStrategy
+        from ..core.strategy import ZeRO
+        core = CoreStrategy(None, (ZeRO(stage=zero_stage),))
+    elif core.zero is None:
+        # a doc WITH a ZeRO fragment overrides the CLI; a doc without
+        # one leaves the caller's zero_stage in force (the pre-unified
+        # behavior dryrun's --zero help documents)
+        kw.setdefault("zero_stage", zero_stage)
+    return Strategy.from_core(core, mesh, **kw)
 
 
 def make_train_fn(cfg: ArchConfig, lr: float = 3e-4):

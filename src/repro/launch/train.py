@@ -64,6 +64,14 @@ def main(argv=None):
     ap.add_argument("--strategy", default=None, metavar="JSON",
                     help="path to a Strategy JSON document "
                     "(e.g. the strategy.json --autotune saves)")
+    ap.add_argument("--backend", default=None,
+                    choices=["reference", "spmd"],
+                    help="execute one real training step of the "
+                    "replayed --strategy on the reduced config's proxy "
+                    "program: 'reference' runs the oracle interpreter "
+                    "(simulated devices), 'spmd' lowers the compiled "
+                    "plan to jit+shard_map over faked host XLA devices "
+                    "(runtime.spmd) and reports measured step time")
     # strategy autotuner (repro.tune): pick PP schedule / microbatches /
     # ZeRO / EP for the FULL config before training the reduced one
     ap.add_argument("--autotune", action="store_true",
@@ -93,13 +101,31 @@ def main(argv=None):
     elif args.tune_budget_gb is not None:
         budget_bytes = int(args.tune_budget_gb * 2**30)
 
+    if args.backend and not args.strategy:
+        print("--backend needs a --strategy document to execute")
+        return 2
+
     if args.strategy:
         from repro import tune
         from repro.core.strategy import Strategy, StrategyError
-        tokens = args.tune_tokens or tune.DEFAULT_TOKENS
+        # parse before anything touches jax devices: --backend spmd must
+        # fake the mesh's host device count before the backend locks it
         try:
             strat = Strategy.from_json(
                 pathlib.Path(args.strategy).read_text())
+        except (StrategyError, OSError) as e:
+            print(f"strategy: {e}")
+            return 2
+        if args.backend == "spmd":
+            if strat.mesh is None:
+                print("strategy: --backend spmd needs a structured "
+                      "strategy with a Mesh (mesh-less documents have "
+                      "no device count to fake)")
+                return 2
+            from repro.launch.hostdevices import ensure_host_devices
+            ensure_host_devices(strat.mesh.n_devices)
+        tokens = args.tune_tokens or tune.DEFAULT_TOKENS
+        try:
             prog, sm = tune.build_strategy_program(base, strat, tokens)
         except (StrategyError, ValueError, OSError) as e:
             print(f"strategy: {e}")
@@ -119,6 +145,45 @@ def main(argv=None):
                   f"{budget_bytes/2**30:.2f}GiB — pick a higher-Remat/"
                   "lower-mb strategy or raise the budget")
             return 2
+
+        if args.backend:
+            # one REAL training step of the same strategy document, on
+            # the reduced config's proxy program (the full-size proxy
+            # would be untractable on host devices)
+            exec_cfg = base.reduced(
+                n_layers=args.layers, d_model=args.d_model,
+                d_ff=args.d_model * 4, vocab=args.vocab,
+                n_heads=max(4, args.d_model // 64))
+            pipe = strat.pipeline
+            # per-microbatch tokens must shard over each stage's
+            # replicate group — its width is every non-pipeline axis,
+            # whatever the data axis is named
+            group = (strat.mesh.n_devices
+                     // strat.mesh.axis_size(pipe.axis)
+                     if strat.mesh else 1)
+            tokens_exec = pipe.n_mb * max(group, 1) * 8
+            prog2, _ = tune.build_strategy_program(exec_cfg, strat,
+                                                   tokens_exec)
+            # the proxy compiles against ShapeDtypeStructs; real
+            # execution materializes them (small: the REDUCED config)
+            batch = tune.synth_batch(prog2)
+            params_real = tune.materialize_params(prog2.params)
+            if args.backend == "spmd":
+                from repro.runtime.spmd import SpmdExecutor
+                ex = SpmdExecutor(prog2, params=params_real)
+                res = ex.run(batch)
+                ms = ex.measure(batch, reps=3) * 1e3
+                print(f"backend[spmd] loss={res.loss:.6f}  "
+                      f"measured_step={ms:.2f}ms on "
+                      f"{res.stats['devices']} host devices "
+                      f"({res.stats['tasks']} plan tasks)")
+            else:
+                from repro.runtime import Interpreter
+                res = Interpreter(prog2, params=params_real).run(batch)
+                print(f"backend[reference] loss={res.loss:.6f}  "
+                      f"peak={res.max_peak()/2**20:.2f}MiB "
+                      f"({res.stats['tasks']} plan tasks)")
+            return 0
 
     if args.autotune:
         from repro import tune

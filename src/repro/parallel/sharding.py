@@ -54,6 +54,37 @@ class Strategy:
     def fsdp_axis(self) -> Optional[str]:
         return "data" if self.zero_stage >= 3 else None
 
+    @staticmethod
+    def from_core(strat, mesh, **overrides) -> "Strategy":
+        """Derive the SPMD-lowering strategy from a first-class
+        ``core.strategy.Strategy`` — the single source of truth both
+        execution worlds now share.  The mapping:
+
+          ZeRO fragment stage   -> ``zero_stage`` (absent -> 0: plain
+                                   replicated DP, grads all-reduced)
+          Remat fragment policy -> ``remat`` ("selective" has no pjit
+                                   analogue and maps to "full")
+          ExpertParallel        -> ``moe_impl="a2a"`` (explicit
+                                   shard_map dispatch, the Piper-IR
+                                   semantics) vs pjit-auto "grouped"
+          mesh axes             -> ``dp_axes`` (("pod","data") on the
+                                   multi-pod mesh)
+
+        ``mesh`` is the *jax* device mesh the shardings target;
+        ``overrides`` pass through remaining knobs (attn_mode,
+        seq_axis, ...)."""
+        from ..launch.mesh import dp_axes_for  # single source of truth
+        kw: dict = {"dp_axes": dp_axes_for(mesh) or ("data",)}
+        zero = strat.zero
+        kw["zero_stage"] = zero.stage if zero is not None else 0
+        rm = strat.remat
+        if rm is not None:
+            kw["remat"] = rm.policy if rm.policy != "selective" else "full"
+        if strat.expert_parallel is not None:
+            kw["moe_impl"] = "a2a"
+        kw.update(overrides)
+        return Strategy(**kw)
+
 
 def _dim_ok(shape, dim, mesh, axis) -> bool:
     if axis is None:

@@ -1,7 +1,23 @@
-"""Piper strategy-agnostic runtime: interpreter + timeline simulator."""
-from .interpreter import Interpreter, RunResult
+"""Piper strategy-agnostic runtime: interpreter + timeline simulator +
+the SPMD executor that runs compiled plans on real XLA devices.
+
+``spmd`` is imported lazily: the executor pulls in ``shard_map`` and is
+only needed by ``--backend spmd`` callers, who import it explicitly
+(``from repro.runtime.spmd import SpmdExecutor``) or via this package's
+``SpmdExecutor`` re-export.
+"""
+from .interpreter import (Interpreter, RunResult, ScheduleReplay,
+                          replay_schedule)
 from .memory import (DeviceLedger, bucket_persistent_bytes,
                      timeline_peak_bytes)
 
-__all__ = ["Interpreter", "RunResult", "DeviceLedger",
-           "bucket_persistent_bytes", "timeline_peak_bytes"]
+__all__ = ["Interpreter", "RunResult", "ScheduleReplay",
+           "replay_schedule", "DeviceLedger", "bucket_persistent_bytes",
+           "timeline_peak_bytes", "SpmdExecutor", "SpmdBackendError"]
+
+
+def __getattr__(name):
+    if name in ("SpmdExecutor", "SpmdBackendError"):
+        from . import spmd
+        return getattr(spmd, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

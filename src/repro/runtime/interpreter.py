@@ -50,7 +50,9 @@ class RunResult:
         return {d: l.peak for d, l in self.ledgers.items()}
 
     def max_peak(self) -> int:
-        return max(l.peak for l in self.ledgers.values())
+        # the SPMD backend returns no ledgers — the host harness
+        # measures time, not device memory (DESIGN.md §12)
+        return max((l.peak for l in self.ledgers.values()), default=0)
 
 
 def tree_nbytes_actual(tree) -> int:
@@ -543,6 +545,12 @@ class Interpreter:
             if self.track_memory and b.shard_grads:
                 ledgers[d].free(("fullgrad", bucket, d))
 
+    # hook: the schedule-only replay (``_PlanWalker``) overrides the
+    # four ``_exec_*`` methods above; everything the dispatch loop itself
+    # consults (stream heads, dependency sets, the fullparam live-count
+    # rate limiter) must be mirrored there, or the replayed order drifts
+    # from the real run's ``RunResult.exec_order``.
+
     def _final_grads(self, grad_acc, grad_cnt, reduced, reduced_cnt):
         out: dict[str, Any] = {}
         for bucket, g in reduced.items():
@@ -563,3 +571,113 @@ class Interpreter:
             out[bucket] = jax.tree_util.tree_map(
                 lambda x: x / len(gs), acc)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Schedule-only replay (SPMD executor parity hook)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ScheduleReplay:
+    """The order-sensitive facts of one interpreter run, recovered
+    without executing any chunk math:
+
+    ``exec_order``     the dynamic task dispatch order (equals the real
+                       run's ``RunResult.exec_order``);
+    ``loss_order``     ``(node, out_slot, device)`` in loss-append order
+                       — the element order of the final loss mean;
+    ``grad_key_order`` ``(bucket, device)`` in gradient-accumulator
+                       insertion order — the device fold order of
+                       never-reduced buckets in ``_final_grads``.
+
+    The SPMD executor (``runtime/spmd.py``) mirrors these so its
+    epilogue reductions run in exactly the reference order (fp64
+    bit-parity needs the same summation sequence, not just the same
+    summands)."""
+    exec_order: list[TaskKey]
+    loss_order: list[tuple[int, int, int]]
+    grad_key_order: list[tuple[str, int]]
+
+
+class _PlanWalker(Interpreter):
+    """Schedule-only subclass: runs the worker loop with the four
+    ``_exec_*`` methods replaced by bookkeeping stubs.  No chunk fn is
+    called and no tensor moves; the only state maintained is what the
+    dispatch loop consults — the ZeRO-3 full-param buffer live-counts
+    that drive the FSDP-style gather rate limiter, and the gather
+    consumer sets that free them."""
+
+    def __init__(self, prog: CompiledProgram,
+                 gather_limit: Optional[int] = None) -> None:
+        super().__init__(prog, params=prog.params, track_memory=True,
+                         gather_limit=gather_limit)
+        self.loss_order: list[tuple[int, int, int]] = []
+        self.grad_key_order: list[tuple[str, int]] = []
+
+    def replay(self, batch: dict[str, Any]) -> "ScheduleReplay":
+        """One replayed dispatch; the order lists reset per call so a
+        walker instance can be reused across batch shapes."""
+        self.loss_order = []
+        self.grad_key_order = []
+        res = self.run(batch)
+        return ScheduleReplay(exec_order=res.exec_order,
+                              loss_order=self.loss_order,
+                              grad_key_order=self.grad_key_order)
+
+    def _exec_chunk(self, node, t, store, feeds, cons, grad_acc, grad_cnt,
+                    losses, ledgers, gather_left, gather_consumers) -> None:
+        if node.meta.get("is_backward") and node.bucket is not None:
+            k = (node.bucket, t.device)
+            if k not in grad_acc:
+                self.grad_key_order.append(k)
+            grad_acc[k] = 0.0
+            grad_cnt[k] = grad_cnt.get(k, 0) + 1
+        for (nid, slot) in self.dag.outputs:
+            if nid == node.id:
+                self.loss_order.append((node.id, slot, t.device))
+                losses.append(jnp.zeros(()))
+        g = node.meta.get("param_from_comm")
+        if g is not None and g in gather_left:
+            gather_left[g].discard((node.id, t.device))
+            if not any(d == t.device for (_, d) in gather_left[g]):
+                ledgers[t.device].free(("fullparam", g, t.device))
+
+    def _exec_send(self, node, t, store, feeds, cons, ledgers) -> None:
+        pass
+
+    def _exec_recv(self, node, t, store, cons, ledgers) -> None:
+        pass
+
+    def _exec_collective(self, node, group_tasks, store, grad_acc, grad_cnt,
+                         reduced, reduced_cnt, ledgers, cons,
+                         gather_left) -> None:
+        if node.op == "all_gather" and node.payload == "param":
+            for t in group_tasks:
+                ledgers[t.device].alloc(
+                    ("fullparam", node.id, t.device), 0)
+        elif node.op in ("all_reduce", "reduce_scatter") \
+                and node.payload == "grad":
+            for member in node.meta.get("fused_members") or [node.meta]:
+                if member.get("part", 0) != 0:
+                    continue
+                bkt = member["bucket"]
+                if not any((bkt, t.device) in grad_acc
+                           for t in group_tasks):
+                    continue
+                reduced[bkt] = 0.0
+                reduced_cnt[bkt] = reduced_cnt.get(bkt, 0) + 1
+                for t in group_tasks:
+                    grad_acc.pop((bkt, t.device), None)
+                    grad_cnt.pop((bkt, t.device), None)
+                    b = self.dag.bucket_of(bkt)
+                    if b.shard_grads:
+                        ledgers[t.device].free(
+                            ("fullgrad", bkt, t.device))
+
+
+def replay_schedule(prog: CompiledProgram, batch: dict[str, Any],
+                    gather_limit: Optional[int] = None) -> ScheduleReplay:
+    """Replay the interpreter's dispatch loop without executing math;
+    see ``ScheduleReplay``.  ``batch`` is only used for input-shape
+    resolution (microbatch splitting), never read numerically."""
+    return _PlanWalker(prog, gather_limit=gather_limit).replay(batch)

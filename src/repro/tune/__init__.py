@@ -14,6 +14,8 @@ simulator + cost model, reject over-budget candidates, cache the winner.
     directives = plan.directives()   # feed to compile_training
 """
 from .cache import PlanCache, fingerprint
+from .measured import (CalibrationResult, MeasuredCell, calibrate,
+                       materialize_params, measure_program, synth_batch)
 from .proxy import (build_candidate_program, build_strategy_program,
                     candidate_directives, candidate_strategy, decompose,
                     make_chunk_cost)
@@ -23,11 +25,12 @@ from .space import (REMAT_POLICIES, SCHEDULE_KINDS, Candidate, MeshSpec,
                     SearchSpace, baseline_candidate)
 
 __all__ = [
-    "REMAT_POLICIES", "SCHEDULE_KINDS", "DEFAULT_TOKENS", "Candidate",
-    "MeshSpec",
+    "REMAT_POLICIES", "SCHEDULE_KINDS", "DEFAULT_TOKENS",
+    "CalibrationResult", "Candidate", "MeasuredCell", "MeshSpec",
     "NoFeasiblePlanError", "Plan", "PlanCache", "Score", "SearchSpace",
     "baseline_candidate", "build_candidate_program",
-    "build_strategy_program", "candidate_directives",
+    "build_strategy_program", "calibrate", "candidate_directives",
     "candidate_strategy", "decompose", "fingerprint", "make_chunk_cost",
-    "score_candidate", "score_strategy", "search",
+    "materialize_params", "measure_program", "score_candidate",
+    "score_strategy", "search", "synth_batch",
 ]

@@ -1,0 +1,120 @@
+"""The ``measured`` proxy column: real SPMD wall-clock next to the
+simulator's prediction, and a CostModel calibration from the ratio.
+
+The tuner scores candidates on the timeline simulator with TPU-v5e
+constants; nothing so far checked those predictions against *any* real
+execution.  This module runs a candidate's compiled proxy program on
+real XLA devices via the SPMD executor (``runtime.spmd``) and reports,
+per cell,
+
+    ratio = measured_seconds / predicted_seconds
+
+On the CI host harness the absolute ratio is meaningless (host cores
+are not v5e chips) — what matters is that the ratio is STABLE across
+cells: a schedule the simulator ranks 1.3x faster should measure ~1.3x
+faster too.  ``calibrate`` folds the median ratio into the cost model's
+``mfu`` so predicted step times land on the measured scale; the spread
+(``CalibrationResult.dispersion``) is the honest error bar of the
+simulator on this hardware.  ``benchmarks/bench_spmd_parity.py``
+records the per-cell table into ``benchmarks/results/spmd/``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+
+from ..runtime.costmodel import CostModel
+
+
+def materialize_params(params, seed: int = 0, scale: float = 0.02):
+    """Real arrays for a (possibly ShapeDtypeStruct-valued) param tree —
+    the proxy programs compile against avals; real execution needs
+    bits."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, l in enumerate(leaves):
+        if not isinstance(l, jax.ShapeDtypeStruct):
+            out.append(l)               # already a real array
+            continue
+        out.append((jax.random.normal(jax.random.fold_in(key, i),
+                                      l.shape) * scale).astype(l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def synth_batch(prog, seed: int = 1) -> dict[str, Any]:
+    """A random batch matching ``prog.input_shapes()``."""
+    key = jax.random.PRNGKey(seed)
+    return {name: jax.random.normal(
+        jax.random.fold_in(key, i), shape).astype(dtype)
+        for i, (name, (shape, dtype))
+        in enumerate(sorted(prog.input_shapes().items()))}
+
+
+def measure_program(prog, batch: Optional[dict] = None,
+                    params: Optional[dict] = None, reps: int = 3) -> float:
+    """Measured wall-clock seconds/step of ``prog`` on the SPMD
+    executor (requires >= ``len(plan.devices)`` XLA devices — see
+    ``launch.hostdevices.ensure_host_devices``)."""
+    from ..runtime.spmd import SpmdExecutor
+    if params is None:
+        params = materialize_params(prog.params)
+    if batch is None:
+        batch = synth_batch(prog)
+    return SpmdExecutor(prog, params=params).measure(batch, reps=reps)
+
+
+@dataclass(frozen=True)
+class MeasuredCell:
+    label: str
+    predicted_seconds: float
+    measured_seconds: float
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_seconds / max(self.predicted_seconds, 1e-12)
+
+    def to_dict(self) -> dict:
+        return {"label": self.label,
+                "predicted_seconds": self.predicted_seconds,
+                "measured_seconds": self.measured_seconds,
+                "ratio": self.ratio}
+
+
+@dataclass(frozen=True)
+class CalibrationResult:
+    cells: tuple
+    scale: float               # median measured/predicted ratio
+    dispersion: float          # max/min cell ratio (1.0 = perfect model)
+    cost: CostModel            # calibrated copy
+
+    def to_dict(self) -> dict:
+        # summary only — the per-cell table is the caller's to record
+        # (bench_spmd_parity keeps ONE copy of the rows; duplicating
+        # them here would leave two sources of truth in the artifact)
+        return {"scale": self.scale, "dispersion": self.dispersion,
+                "mfu": self.cost.mfu, "n_cells": len(self.cells)}
+
+
+def calibrate(cost: CostModel,
+              cells: Sequence[MeasuredCell]) -> CalibrationResult:
+    """Fold the measured/predicted ratio into the cost model.
+
+    Chunk time scales as ``1/(peak_flops * mfu)``; dividing ``mfu`` by
+    the median ratio rescales every compute-bound prediction onto the
+    measured clock without touching the comm constants (host 'links'
+    are memcpy — calibrating ``ici_bw`` against them would be
+    fiction).  ``mfu`` is clamped to (1e-4, 1.0]."""
+    if not cells:
+        raise ValueError("calibrate needs at least one measured cell")
+    ratios = [c.ratio for c in cells]
+    scale = statistics.median(ratios)
+    mfu = min(max(cost.mfu / max(scale, 1e-12), 1e-4), 1.0)
+    return CalibrationResult(
+        cells=tuple(cells), scale=scale,
+        dispersion=max(ratios) / max(min(ratios), 1e-12),
+        cost=dataclasses.replace(cost, mfu=mfu))
