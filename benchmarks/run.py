@@ -29,11 +29,12 @@ def main(argv=None) -> None:
                     "results/smoke/)")
     args = ap.parse_args(argv)
 
-    # the spmd parity section needs real (faked-host) XLA devices; the
-    # flag must be set before jax's backend first initializes.  Extra
-    # host devices are inert for the simulator/interpreter sections.
+    # the spmd parity (4) and elastic recovery (8) sections need real
+    # (faked-host) XLA devices; the flag must be set before jax's
+    # backend first initializes.  Extra host devices are inert for the
+    # simulator/interpreter sections.
     from repro.launch.hostdevices import ensure_host_devices
-    ensure_host_devices(4, verify=False)
+    ensure_host_devices(8, verify=False)
 
     import jax
     jax.config.update("jax_platform_name", "cpu")
@@ -43,9 +44,9 @@ def main(argv=None) -> None:
         smoke.main(args.smoke_out)
         return
 
-    from . import (bench_kernels, bench_overlap, bench_parity,
-                   bench_pp_schedules, bench_pp_zero, bench_remat,
-                   bench_scaling, bench_spmd_parity)
+    from . import (bench_elastic, bench_kernels, bench_overlap,
+                   bench_parity, bench_pp_schedules, bench_pp_zero,
+                   bench_remat, bench_scaling, bench_spmd_parity)
     sections = [
         ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
          bench_pp_schedules.main),
@@ -55,6 +56,8 @@ def main(argv=None) -> None:
          bench_remat.main),
         ("PR5: SPMD executor measured-vs-predicted + bit-parity",
          bench_spmd_parity.main),
+        ("PR6: elastic recovery steps-lost / wall-time grid",
+         bench_elastic.main),
         ("Table1+Fig8: PP x ZeRO support + peak memory",
          bench_pp_zero.main),
         ("Table2: DP ZeRO-1 parity + dispatch overhead",

@@ -1,4 +1,9 @@
-"""Sharded checkpointing with async writes + elastic restore."""
+"""Sharded checkpointing with async writes + elastic restore, and the
+ZeRO shard remap codec for data-parallel degree changes."""
 from .manager import CheckpointManager, restore_tree, save_tree
+from .reshard import (ReshardError, remap_shards, reshard_tree,
+                      shard_leaf, shard_tree, unshard_leaf, unshard_tree)
 
-__all__ = ["CheckpointManager", "restore_tree", "save_tree"]
+__all__ = ["CheckpointManager", "ReshardError", "remap_shards",
+           "reshard_tree", "restore_tree", "save_tree", "shard_leaf",
+           "shard_tree", "unshard_leaf", "unshard_tree"]

@@ -76,6 +76,13 @@ def restore_tree(tree_like, directory: pathlib.Path, *,
         name = _leaf_name(path)
         meta = manifest["leaves"][name]
         arr = np.load(directory / meta["file"])
+        want = np.dtype(meta["dtype"])
+        if arr.dtype != want and arr.dtype.kind == "V" \
+                and arr.dtype.itemsize == want.itemsize:
+            # .npy round-trips extension dtypes (bfloat16, float8_*) as
+            # raw void records; the manifest keeps the real dtype —
+            # reinterpret the bits (same buffer, so sha256 still holds)
+            arr = arr.view(want)
         if verify:
             digest = hashlib.sha256(arr.tobytes()).hexdigest()
             if digest != meta["sha256"]:

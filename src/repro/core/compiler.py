@@ -32,6 +32,26 @@ class CompiledProgram:
     schedule: Sequence[Directive]
     strategy: Optional[Strategy] = None
     stats: dict[str, Any] = field(default_factory=dict)
+    # the trace closure, kept so the SAME model can be re-lowered under
+    # a different Strategy at runtime (elastic recovery recompiles for
+    # the shrunk mesh; ft/elastic.py).  None for hand-built programs.
+    forward: Optional[Callable] = None
+    inputs: Optional[dict[str, tuple]] = None
+
+    def recompile(self, strategy: Strategy,
+                  params: Optional[dict[str, Any]] = None
+                  ) -> "CompiledProgram":
+        """Re-lower the same traced model under ``strategy`` — plan
+        compilation as a runtime event.  ``params`` overrides the bucket
+        tree (shapes must match; tracing is shape-only, so avals work).
+        Only programs built by ``compile_training`` carry the closure."""
+        if self.forward is None or self.inputs is None:
+            raise ValueError(
+                "this CompiledProgram was not built by compile_training "
+                "(no recorded forward/inputs) — nothing to recompile")
+        return compile_training(
+            self.forward, params if params is not None else self.params,
+            self.inputs, strategy=strategy)
 
     def input_shapes(self) -> dict[str, tuple[tuple[int, ...], str]]:
         """Static base (pre-``Split``) graph-input shapes the runtime
@@ -122,7 +142,8 @@ def compile_training(
     passes.run_all(dag, overlap=overlap, offload=offload)
     plan = build_plan(dag)
     prog = CompiledProgram(dag=dag, plan=plan, params=params,
-                           schedule=tuple(directives), strategy=strategy)
+                           schedule=tuple(directives), strategy=strategy,
+                           forward=forward, inputs=dict(inputs))
     prog.stats = {**dag.stats(),
                   "devices": len(plan.devices),
                   "elided_allgathers": dag.meta.get("elided_allgathers", 0),

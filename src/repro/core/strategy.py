@@ -128,6 +128,28 @@ class Mesh:
         """Device ids as an ndarray of the mesh shape (rank-major)."""
         return np.arange(self.n_devices).reshape(self.shape)
 
+    def resized(self, axis: str, size: int) -> "Mesh":
+        """A new mesh with ``axis`` resized to ``size`` (same axis order,
+        ranks renumbered rank-major) — the elastic planner's primitive
+        for deriving a shrunk mesh from surviving ranks
+        (``ft.elastic.shrink_for_survivors``)."""
+        if axis not in self:
+            raise StrategyError(
+                f"Mesh has no axis {axis!r} (axes: {list(self.axis_names)})")
+        return Mesh(**{n: (size if n == axis else s)
+                       for n, s in self._axes})
+
+    def rank_coords(self, rank: int) -> dict[str, int]:
+        """Axis coordinates of a rank-major device id."""
+        if not 0 <= rank < self.n_devices:
+            raise StrategyError(
+                f"rank {rank} outside mesh of {self.n_devices} devices")
+        coords = {}
+        for name, s in reversed(self._axes):
+            coords[name] = rank % s
+            rank //= s
+        return dict(reversed(coords.items()))
+
     def device_groups(self, axis: str) -> list[list[int]]:
         """One group per coordinate along ``axis``: group ``i`` holds
         every device whose ``axis`` coordinate is ``i`` (all other axes
@@ -593,6 +615,31 @@ class Strategy:
     def raw(self) -> tuple:
         return tuple(f for f in self.fragments
                      if isinstance(f, RawDirectives))
+
+    def for_mesh(self, mesh: Mesh) -> "Strategy":
+        """Re-target this strategy to a different mesh and revalidate —
+        the elastic-recovery primitive (plan compilation as a *runtime*
+        event): the same fragments, lowered for a shrunk world.
+
+        The pipeline stage count is pinned to its value under the OLD
+        mesh (``n_stages`` defaults to ``2 * mesh[axis]``), because the
+        traced model's per-stage parameter buckets are fixed — a shrunk
+        pipeline axis remaps MORE stages per rank, it never changes the
+        stage graph.  Raises ``StrategyError`` when the fragments cannot
+        be satisfied on the new mesh (e.g. stage count not divisible by
+        the new pipeline degree, or dualpipev's S == 2*pp pin)."""
+        import dataclasses
+        if self.mesh is None:
+            raise StrategyError(
+                "cannot re-target a mesh-less strategy (legacy "
+                "RawDirectives shim) — elastic recovery needs "
+                "structured fragments")
+        frags = []
+        for f in self.fragments:
+            if isinstance(f, Pipeline) and f.n_stages is None:
+                f = dataclasses.replace(f, n_stages=f.stages(self.mesh))
+            frags.append(f)
+        return Strategy(mesh, tuple(frags)).validate()
 
     def replacing(self, *frags: Fragment) -> "Strategy":
         """A copy with each given fragment substituted for the

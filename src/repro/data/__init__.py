@@ -1,6 +1,7 @@
-"""Deterministic, shardable, checkpointable token data pipeline."""
-from .pipeline import DataState, MemmapTokenSource, SyntheticTokenSource, \
-    TokenLoader
+"""Deterministic, shardable, checkpointable data pipelines (token and
+vector streams share one resumable-state contract)."""
+from .pipeline import (DataState, MemmapTokenSource, SyntheticTokenSource,
+                       SyntheticVectorSource, TokenLoader, VectorLoader)
 
 __all__ = ["DataState", "MemmapTokenSource", "SyntheticTokenSource",
-           "TokenLoader"]
+           "SyntheticVectorSource", "TokenLoader", "VectorLoader"]

@@ -1,5 +1,14 @@
 """Fault tolerance: supervised training loop, failure injection,
-straggler watchdog, elastic restart."""
-from .supervisor import FailureInjector, StragglerWatchdog, Supervisor
+straggler watchdog, elastic mesh-shrink recovery (DESIGN.md §13)."""
+from .elastic import (ElasticError, ElasticPlan, ElasticSupervisor,
+                      RankFailure, RankFailureInjector, RecoveryReport,
+                      shrink_for_survivors, sgd_update, zero_shard_degree)
+from .supervisor import (FailureInjector, StragglerWatchdog,
+                         StreamPositionError, Supervisor, WorkerFailure,
+                         check_stream_position)
 
-__all__ = ["FailureInjector", "StragglerWatchdog", "Supervisor"]
+__all__ = ["ElasticError", "ElasticPlan", "ElasticSupervisor",
+           "FailureInjector", "RankFailure", "RankFailureInjector",
+           "RecoveryReport", "StragglerWatchdog", "StreamPositionError",
+           "Supervisor", "WorkerFailure", "check_stream_position",
+           "shrink_for_survivors", "sgd_update", "zero_shard_degree"]

@@ -1,0 +1,417 @@
+"""Elastic fault tolerance for the strategy compiler (DESIGN.md §13).
+
+When a rank dies mid-run, the supervisor does not wait for a
+replacement: it *shrinks the world*.  The pieces, in order:
+
+  1. ``shrink_for_survivors`` — derive the largest valid ``Mesh`` that
+     fits the surviving ranks by shrinking exactly ONE axis of the old
+     mesh (data-parallel axes preferred; the pipeline axis only when
+     the pinned stage count still divides the new degree).  Candidate
+     validity is decided by ``Strategy.for_mesh`` — the same fragment
+     validation the compiler runs, so the planner can never propose a
+     mesh the compiler would reject.
+  2. ``CompiledProgram.recompile`` — re-lower the SAME traced model
+     under the re-targeted strategy (plan compilation as a runtime
+     event), warmed by a plan cache keyed on the strategy document so a
+     repeat failure at the same world size costs zero compiles.
+  3. restore — params/optimizer state from the last async checkpoint
+     (run through the ZeRO shard remap codec when the DP degree
+     changed), data-stream position from the same checkpoint, asserted
+     against the checkpoint step (``check_stream_position``).
+  4. resume — a fresh runner over the surviving *physical* devices,
+     reporting steps-lost-per-failure and recovery wall time
+     (``RecoveryReport``).
+
+The parity contract (tests/test_elastic.py): a run that fails and
+elastically resumes produces, from the resume step onward, bit-exact
+fp64 losses and final params versus an uninterrupted run that restores
+the same checkpoint directly onto the shrunk mesh.  Shrinking DP
+changes gradient summation order, so parity is defined from the shared
+checkpoint — not across the mesh change.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from ..checkpoint import CheckpointManager, reshard_tree
+from ..core.compiler import CompiledProgram
+from ..core.strategy import Mesh, Strategy, StrategyError
+from .supervisor import (FailureInjector, StragglerWatchdog, WorkerFailure,
+                         check_stream_position)
+
+
+class ElasticError(RuntimeError):
+    """Elastic recovery could not proceed (no valid shrunk mesh, failure
+    budget exhausted, or an inconsistent checkpoint)."""
+
+
+class RankFailure(WorkerFailure):
+    """A specific rank died (vs. the anonymous ``WorkerFailure``)."""
+
+    def __init__(self, step: int, rank: int) -> None:
+        super().__init__(f"rank {rank} lost at step {step}")
+        self.step = step
+        self.rank = rank
+
+
+@dataclass
+class RankFailureInjector:
+    """Kill specific ranks at specific steps: ``{step: rank}`` (each
+    fires once).  The elastic test harness's kill switch."""
+    fail_at: dict = field(default_factory=dict)
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise RankFailure(step, int(self.fail_at[step]))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shrink planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    """The planner's output: where the world shrank and the re-targeted
+    strategy to recompile."""
+    old_mesh: Mesh
+    new_mesh: Mesh
+    strategy: Strategy
+    survivors: tuple[int, ...]
+    shrunk_axis: str
+
+
+def shrink_for_survivors(strategy: Strategy,
+                         survivors: Sequence[int]) -> ElasticPlan:
+    """Derive the best shrunk mesh for ``survivors`` (logical rank ids
+    of the old mesh that are still alive).
+
+    Policy: shrink exactly one axis.  Candidates are every
+    ``axis -> size`` reduction whose world fits the survivor count and
+    whose re-targeted strategy validates (``Strategy.for_mesh`` — stage
+    divisibility, dualpipev's S == 2*pp pin, fragment axis checks).
+    Preference order: largest surviving world first, then non-pipeline
+    axes before the pipeline axis (shrinking DP keeps the per-rank
+    stage placement intact; shrinking PP remaps stages and regroups
+    every collective), then the rightmost (fastest-varying) axis.
+
+    The plan depends only on ``len(survivors)``: ranks are logical, the
+    shrunk mesh renumbers them densely, and the caller maps logical
+    ranks onto surviving *physical* devices.
+    """
+    mesh = strategy.mesh
+    if mesh is None:
+        raise ElasticError(
+            "cannot shrink a mesh-less strategy (legacy RawDirectives "
+            "shim) — elastic recovery needs structured fragments")
+    n_survive = len(set(int(r) for r in survivors))
+    if n_survive < 1:
+        raise ElasticError("no surviving ranks")
+    if n_survive >= mesh.n_devices:
+        raise ElasticError(
+            f"nothing to shrink: {n_survive} survivors >= world "
+            f"{mesh.n_devices}")
+    pipe = strategy.pipeline
+    pp_axis = pipe.axis if pipe is not None else None
+    names = list(mesh.axis_names)
+    candidates = []
+    for pos, name in enumerate(names):
+        old = mesh[name]
+        pref = 1 if name == pp_axis else 0
+        # rightmost axis wins ties: its groups are contiguous ranks, the
+        # least disruptive renumbering
+        tie = len(names) - 1 - pos
+        for size in range(old - 1, 0, -1):
+            m = mesh.resized(name, size)
+            if m.n_devices > n_survive:
+                continue
+            try:
+                strat = strategy.for_mesh(m)
+            except StrategyError:
+                continue
+            candidates.append(
+                ((-m.n_devices, pref, -tie), name, m, strat))
+    if not candidates:
+        raise ElasticError(
+            f"no valid shrunk mesh for {n_survive} survivors of "
+            f"{mesh!r} — no single-axis reduction satisfies the "
+            f"strategy's fragments")
+    candidates.sort(key=lambda c: c[0])
+    _, axis, new_mesh, strat = candidates[0]
+    return ElasticPlan(old_mesh=mesh, new_mesh=new_mesh, strategy=strat,
+                       survivors=tuple(sorted(set(int(r)
+                                                  for r in survivors))),
+                       shrunk_axis=axis)
+
+
+def zero_shard_degree(strategy: Strategy) -> int:
+    """The ZeRO shard degree a checkpoint written under ``strategy``
+    implies: the DP width when params/grads are sharded (stage >= 2),
+    else 1 (full replicas; nothing to remap)."""
+    z = strategy.zero
+    if z is None or z.stage < 2 or strategy.mesh is None:
+        return 1
+    return strategy.mesh[z.axis]
+
+
+def sgd_update(lr: float = 0.05) -> Callable:
+    """A tiny deterministic optimizer for the supervision loop/tests:
+    ``update(params, grads, step) -> params`` doing per-bucket SGD.
+    fp64-reproducible by construction (pure tree_map, no RNG)."""
+    def update(params: dict[str, Any], grads: dict[str, Any],
+               step: int) -> dict[str, Any]:
+        out = dict(params)
+        for bucket, g in grads.items():
+            out[bucket] = jax.tree_util.tree_map(
+                lambda p, gg: p - lr * gg, params[bucket], g)
+        return out
+    return update
+
+
+# ---------------------------------------------------------------------------
+# Elastic supervisor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RecoveryReport:
+    """One failure's accounting, appended to
+    ``ElasticSupervisor.reports``.  ``steps_lost`` is the work redone:
+    steps completed after the restored checkpoint and before the
+    failure (bounded by the checkpoint interval)."""
+    step_failed: int
+    resume_step: int
+    steps_lost: int
+    recovery_seconds: float
+    compile_seconds: float
+    cache_hit: bool
+    old_world: int
+    new_world: int
+    failed_rank: int
+    shrunk_axis: str
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class ElasticSupervisor:
+    """GlobalPlan-aware fault-tolerant training loop.
+
+    Unlike ``Supervisor`` (which re-runs a fixed step function), this
+    owns the compiled program: on a ``WorkerFailure`` it re-plans the
+    mesh for the survivors, recompiles the strategy, remaps checkpoint
+    shards across the ZeRO degree change, restores the data stream, and
+    rebuilds the runner on the surviving physical devices.
+
+    ``runner_factory(prog, params, physical_devices)`` builds the
+    executor — ``runtime.spmd.SpmdExecutor`` in real runs, the
+    ``Interpreter`` in fast tests (which may ignore
+    ``physical_devices``).  The runner contract: ``run(batch)`` returns
+    an object with ``.loss`` and ``.grads``, and assigning
+    ``runner.params`` swaps weights without retracing.
+    """
+
+    def __init__(self, prog: CompiledProgram, ckpt: CheckpointManager,
+                 loader, *, runner_factory: Callable,
+                 update: Optional[Callable] = None,
+                 checkpoint_every: int = 10,
+                 injector: Optional[RankFailureInjector] = None,
+                 watchdog: Optional[StragglerWatchdog] = None,
+                 max_failures: int = 4) -> None:
+        if prog.strategy is None or prog.strategy.mesh is None:
+            raise ElasticError(
+                "ElasticSupervisor needs a program compiled from a "
+                "meshed Strategy (compile_training(strategy=...))")
+        self.prog = prog
+        self.strategy = prog.strategy
+        self.ckpt = ckpt
+        self.loader = loader
+        self.runner_factory = runner_factory
+        self.update = update or sgd_update()
+        self.every = int(checkpoint_every)
+        self.injector = injector
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.max_failures = max_failures
+        self.failures = 0
+        self.world = self.strategy.mesh.n_devices
+        # logical rank -> physical device index; recovery drops the dead
+        # physical device and keeps a dense logical numbering
+        self.physical: list[int] = list(range(self.world))
+        # plan cache: strategy document -> compiled program, so a repeat
+        # failure at an already-seen world size skips the compile
+        self._compiled: dict[str, CompiledProgram] = {
+            self.strategy.to_json(): prog}
+        self.history: list[dict] = []
+        self.reports: list[RecoveryReport] = []
+
+    # -- plan cache ---------------------------------------------------------
+    def prewarm(self, n_failures: int = 1) -> int:
+        """Pre-compile the plans the next ``n_failures`` single-rank
+        losses would need, so recovery pays only restore time.  Returns
+        the number of programs compiled."""
+        compiled = 0
+        strat = self.strategy
+        world = strat.mesh.n_devices
+        for _ in range(n_failures):
+            if world <= 1:
+                break
+            try:
+                plan = shrink_for_survivors(strat, range(world - 1))
+            except ElasticError:
+                break
+            key = plan.strategy.to_json()
+            if key not in self._compiled:
+                self._compiled[key] = self.prog.recompile(
+                    strategy=plan.strategy)
+                compiled += 1
+            strat = plan.strategy
+            world = strat.mesh.n_devices
+        return compiled
+
+    def rebalance_proposal(self) -> Optional[dict[int, int]]:
+        """Straggler-aware microbatch split for the current pipeline
+        n_mb, from the watchdog's per-rank EMAs (None when no Pipeline
+        fragment or no observations)."""
+        pipe = self.strategy.pipeline
+        if pipe is None:
+            return None
+        slow = self.watchdog.slowdowns()
+        if not slow:
+            return None
+        from ..tune.rebalance import rebalance_microbatches
+        return rebalance_microbatches(pipe.n_mb, slow)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, params: dict[str, Any], n_steps: int,
+            log_every: int = 0) -> dict[str, Any]:
+        """Train ``n_steps``; returns the final params.  Losses land in
+        ``self.history`` (one record per completed step; records after a
+        rewind shadow the lost ones — last write per step wins)."""
+        runner = self.runner_factory(self.prog, params,
+                                     tuple(self.physical))
+        step = 0
+        init_params = params
+        init_loader_state = dict(self.loader.state_dict())
+        while step < n_steps:
+            try:
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = self.loader.next_batch()
+                t0 = time.time()
+                res = runner.run(batch)
+                dt = time.time() - t0
+                params = self.update(params, res.grads, step)
+                runner.params = params
+                self.watchdog.observe(step, dt)
+                step += 1
+                self.history.append({"step": step,
+                                     "loss": float(res.loss),
+                                     "dt": dt, "world": self.world})
+                if log_every and step % log_every == 0:
+                    print(f"  step {step}: loss={float(res.loss):.4f} "
+                          f"world={self.world}", flush=True)
+                if step % self.every == 0 or step == n_steps:
+                    self.ckpt.save(
+                        step, {"params": params},
+                        extra={"data": self.loader.state_dict(),
+                               "strategy": self.strategy.to_json(),
+                               "world": self.world,
+                               "zero_shards":
+                                   zero_shard_degree(self.strategy)})
+            except WorkerFailure as e:
+                params, runner, step = self._recover(
+                    e, step, params, init_params, init_loader_state)
+        self.ckpt.wait()
+        return params
+
+    # -- recovery -----------------------------------------------------------
+    def _recover(self, failure: WorkerFailure, step_failed: int,
+                 live_params: dict[str, Any],
+                 init_params: dict[str, Any],
+                 init_loader_state: dict) -> tuple:
+        self.failures += 1
+        if self.failures > self.max_failures:
+            raise ElasticError(
+                f"failure budget exhausted ({self.max_failures}); "
+                f"last: {failure}") from failure
+        t_start = time.time()
+        failed_rank = getattr(failure, "rank", self.world - 1)
+        if not 0 <= failed_rank < self.world:
+            raise ElasticError(
+                f"failed rank {failed_rank} outside world {self.world}")
+        old_world = self.world
+        old_strategy = self.strategy
+        survivors = [r for r in range(old_world) if r != failed_rank]
+
+        # 1. re-plan the mesh for the survivors
+        plan = shrink_for_survivors(old_strategy, survivors)
+        new_world = plan.new_mesh.n_devices
+
+        # 2. recompile (or hit the plan cache)
+        key = plan.strategy.to_json()
+        cache_hit = key in self._compiled
+        t_c = time.time()
+        if not cache_hit:
+            self._compiled[key] = self.prog.recompile(
+                strategy=plan.strategy)
+        compile_seconds = 0.0 if cache_hit else time.time() - t_c
+        new_prog = self._compiled[key]
+
+        # surviving physical devices, in rank order; the shrunk world
+        # takes the first new_world of them (dense logical renumbering)
+        alive = [p for i, p in enumerate(self.physical)
+                 if i != failed_rank]
+        new_phys = alive[:new_world]
+
+        # 3. restore params + stream position from the last checkpoint
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            params = init_params
+            self.loader.load_state_dict(dict(init_loader_state))
+            resume = 0
+        else:
+            self.ckpt.wait()       # the async write may still be in flight
+            # restore against the LIVE params tree: its leaves are the
+            # concrete arrays whose dtypes were saved.  ``prog.params``
+            # may hold abstract proxy specs (e.g. bfloat16 avals) that
+            # numpy cannot cast a loaded array into.
+            state, extra = self.ckpt.restore({"params": live_params},
+                                             step=latest)
+            resume = check_stream_position(extra)
+            self.loader.load_state_dict(extra["data"])
+            params = state["params"]
+            old_deg = int(extra.get("zero_shards", 1))
+            new_deg = zero_shard_degree(plan.strategy)
+            if old_deg != new_deg:
+                # regather the old ZeRO shards and re-slice for the new
+                # DP width — bit-exact by the codec's verify pass
+                params = reshard_tree(params, old_deg, new_deg)
+
+        # 4. resume on the shrunk world
+        self.strategy = plan.strategy
+        self.world = new_world
+        self.physical = new_phys
+        runner = self.runner_factory(new_prog, params, tuple(new_phys))
+        report = RecoveryReport(
+            step_failed=step_failed, resume_step=resume,
+            steps_lost=step_failed - resume,
+            recovery_seconds=time.time() - t_start,
+            compile_seconds=compile_seconds, cache_hit=cache_hit,
+            old_world=old_world, new_world=new_world,
+            failed_rank=failed_rank, shrunk_axis=plan.shrunk_axis)
+        self.reports.append(report)
+        print(f"  [elastic] {failure} — world {old_world}->{new_world} "
+              f"(shrunk {plan.shrunk_axis}), resumed at step {resume} "
+              f"({report.steps_lost} steps lost, "
+              f"{report.recovery_seconds:.2f}s"
+              f"{', plan cache hit' if cache_hit else ''})", flush=True)
+        return params, runner, resume
+
+
+__all__ = ["ElasticError", "ElasticPlan", "ElasticSupervisor",
+           "RankFailure", "RankFailureInjector", "RecoveryReport",
+           "shrink_for_survivors", "sgd_update", "zero_shard_degree"]

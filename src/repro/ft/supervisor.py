@@ -1,6 +1,6 @@
-"""Fault-tolerant training supervision (DESIGN.md §7).
+"""Fault-tolerant training supervision (DESIGN.md §7, §13).
 
-``Supervisor`` wraps a step function with:
+``Supervisor`` wraps a flat (single-plan) step function with:
   - periodic async checkpoints (params/opt state + data-pipeline state,
     so restarts resume the exact sample stream),
   - failure handling: on a (possibly injected) WorkerFailure the loop
@@ -10,8 +10,19 @@
     DP degree when survivors < world (simulated on CPU by re-sharding
     the restored state onto the new mesh),
   - straggler watchdog: per-step wall-clock EMA; steps slower than
-    ``threshold``x the EMA are recorded (at real scale this signal
-    drives microbatch rebalancing — benchmarked in the simulator).
+    ``threshold``x the EMA are recorded, and per-RANK EMAs feed the
+    tuner's microbatch rebalancing (``tune.rebalance``).
+
+The data stream position is part of the restart contract: checkpoints
+persist the loader state, restores assert that the restored position
+matches the checkpoint step, and a failure BEFORE the first checkpoint
+rewinds the loader to its pristine state (a from-scratch restart that
+silently kept the advanced stream would train on a different sample
+order than a true cold start).
+
+``ft.elastic.ElasticSupervisor`` is the GlobalPlan-aware sibling: it
+recompiles the strategy for a shrunk mesh instead of merely rebuilding
+a DP step function.
 """
 from __future__ import annotations
 
@@ -19,11 +30,18 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from ..checkpoint import CheckpointManager
 
 
 class WorkerFailure(RuntimeError):
     """A (simulated) lost worker / preemption."""
+
+
+class StreamPositionError(RuntimeError):
+    """A restored checkpoint's data-stream position disagrees with its
+    step — resuming would silently skip or replay samples."""
 
 
 @dataclass
@@ -40,10 +58,20 @@ class FailureInjector:
 
 @dataclass
 class StragglerWatchdog:
+    """Wall-clock EMAs over step times.
+
+    ``observe`` keeps the global per-step EMA (events = steps slower
+    than ``threshold``x it).  ``observe_rank`` keeps one EMA per rank —
+    the signal that, at real scale, drives the tuner's microbatch
+    rebalancing: ``slowdowns()`` normalizes the per-rank EMAs by the
+    fleet median and ``tune.rebalance.rebalance_microbatches`` turns
+    that into a per-replica microbatch share."""
     threshold: float = 2.0
     ema: float = 0.0
     beta: float = 0.9
     events: list = field(default_factory=list)
+    rank_ema: dict = field(default_factory=dict)
+    rank_events: list = field(default_factory=list)
 
     def observe(self, step: int, dt: float) -> bool:
         is_straggler = self.ema > 0 and dt > self.threshold * self.ema
@@ -53,6 +81,51 @@ class StragglerWatchdog:
         self.ema = (self.beta * self.ema + (1 - self.beta) * dt
                     if self.ema else dt)
         return is_straggler
+
+    def observe_rank(self, rank: int, step: int, dt: float) -> bool:
+        """Update rank's EMA; a rank is a straggler when its step time
+        exceeds ``threshold``x the median of the OTHER ranks' EMAs (its
+        own past cannot normalize away a persistent slowdown)."""
+        others = [v for r, v in self.rank_ema.items()
+                  if r != rank and v > 0]
+        ref = float(np.median(others)) if others else 0.0
+        is_straggler = ref > 0 and dt > self.threshold * ref
+        if is_straggler:
+            self.rank_events.append((step, rank, dt, ref))
+        prev = self.rank_ema.get(rank, 0.0)
+        self.rank_ema[rank] = (self.beta * prev + (1 - self.beta) * dt
+                               if prev else dt)
+        return is_straggler
+
+    def slowdowns(self) -> dict[int, float]:
+        """Per-rank EMA normalized by the fleet median — 1.0 is on-pace;
+        the microbatch-rebalance hook's input."""
+        if not self.rank_ema:
+            return {}
+        med = float(np.median(list(self.rank_ema.values())))
+        if med <= 0:
+            return {r: 1.0 for r in self.rank_ema}
+        return {r: v / med for r, v in self.rank_ema.items()}
+
+
+def check_stream_position(extra: dict) -> int:
+    """Validate a checkpoint's persisted data-stream position against
+    its step; returns the step.  Raises ``StreamPositionError`` when the
+    loader state is missing or disagrees — both mean a resume would
+    consume the wrong samples."""
+    step = int(extra["step"])
+    data = extra.get("data")
+    if not isinstance(data, dict):
+        raise StreamPositionError(
+            f"checkpoint at step {step} carries no data-stream state; "
+            "resuming would restart the sample stream at an arbitrary "
+            "position")
+    pos = data.get("step")
+    if pos is None or int(pos) != step:
+        raise StreamPositionError(
+            f"checkpoint at step {step} persisted stream position "
+            f"{pos!r} — the resumed run would skip or replay samples")
+    return step
 
 
 class Supervisor:
@@ -76,6 +149,11 @@ class Supervisor:
         """Run ``n_steps`` with checkpoint/restart.  ``step_fn(state,
         batch) -> (state, metrics)``.  Returns the final state."""
         step = int(state["step"]) if "step" in state else 0
+        # pristine restart snapshot: a failure BEFORE the first
+        # checkpoint must rewind the data stream too (jnp leaves are
+        # immutable, so keeping references is a faithful snapshot)
+        init_state, init_step = state, step
+        init_loader_state = dict(self.loader.state_dict())
         while step < n_steps:
             try:
                 if self.injector:
@@ -104,13 +182,16 @@ class Supervisor:
                       flush=True)
                 latest = self.ckpt.latest_step()
                 if latest is None:
-                    # no checkpoint yet: restart from scratch
-                    step = int(state.get("step", 0))
+                    # no checkpoint yet: true from-scratch restart —
+                    # model state AND stream position back to pristine
+                    state = init_state
+                    self.loader.load_state_dict(dict(init_loader_state))
+                    step = init_step
                     continue
                 state, extra = self.ckpt.restore(state)
+                step = check_stream_position(extra)
                 self.loader.load_state_dict(extra["data"])
                 if on_restore is not None:
                     state = on_restore(state)
-                step = int(extra["step"])
         self.ckpt.wait()
         return state

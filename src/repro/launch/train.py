@@ -43,6 +43,100 @@ def build_step(cfg, lr_fn):
     return step
 
 
+class _ProgramLoader:
+    """Deterministic, exactly-resumable batch stream for an arbitrary
+    compiled program: batches are a pure function of (seed, step) over
+    ``CompiledProgram.input_shapes()`` — the elastic demo's stand-in for
+    the token pipeline (same ``state_dict`` contract)."""
+
+    def __init__(self, shapes: dict, vocab: int, seed: int = 0) -> None:
+        import numpy as np
+        from repro.data import DataState
+        self._np = np
+        self.shapes = dict(sorted(shapes.items()))
+        self.vocab = vocab
+        self.state = DataState(seed=seed)
+
+    def next_batch(self) -> dict:
+        np = self._np
+        rng = np.random.Generator(np.random.Philox(
+            key=self.state.seed, counter=[0, 0, 2, self.state.step]))
+        batch = {}
+        for name, (shape, dtype) in self.shapes.items():
+            dt = np.dtype(dtype)
+            if np.issubdtype(dt, np.integer):
+                batch[name] = rng.integers(
+                    0, self.vocab, size=shape).astype(dt)
+            else:
+                batch[name] = rng.standard_normal(shape).astype(dt)
+        self.state.step += 1
+        return batch
+
+    def state_dict(self) -> dict:
+        return self.state.to_dict()
+
+    def load_state_dict(self, d: dict) -> None:
+        from repro.data import DataState
+        self.state = DataState.from_dict(d)
+
+
+def run_elastic(prog, params, vocab: int, args) -> int:
+    """The --elastic demo: train, lose a rank, shrink, resume."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.ft import (ElasticError, ElasticSupervisor,
+                          RankFailureInjector)
+
+    world = prog.strategy.mesh.n_devices
+    n_steps = args.elastic_steps
+    fail_at = (args.elastic_fail_at if args.elastic_fail_at is not None
+               else max(1, n_steps // 2))
+    rank = (args.elastic_kill_rank if args.elastic_kill_rank is not None
+            else world - 1)
+    loader = _ProgramLoader(prog.input_shapes(), vocab, seed=17)
+
+    if args.backend == "spmd":
+        from repro.runtime.spmd import SpmdExecutor
+
+        def runner_factory(p, prm, devices):
+            return SpmdExecutor(p, params=prm, physical_devices=devices)
+    else:
+        from repro.runtime import Interpreter
+
+        def runner_factory(p, prm, devices):
+            return Interpreter(p, params=prm, track_memory=False)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_elastic_")
+    try:
+        sup = ElasticSupervisor(
+            prog, CheckpointManager(ckpt_dir, keep=4, async_save=False),
+            loader, runner_factory=runner_factory,
+            checkpoint_every=args.elastic_ckpt_every,
+            injector=RankFailureInjector({fail_at: rank}))
+        print(f"elastic[{args.backend}] world={world} steps={n_steps} "
+              f"(rank {rank} dies at step {fail_at}, checkpoint every "
+              f"{args.elastic_ckpt_every})")
+        try:
+            sup.run(params, n_steps, log_every=1)
+        except ElasticError as e:
+            print(f"elastic: {e}")
+            return 2
+        for r in sup.reports:
+            print(f"elastic: recovered from rank {r.failed_rank} loss — "
+                  f"world {r.old_world}->{r.new_world} (shrunk "
+                  f"{r.shrunk_axis}), {r.steps_lost} steps lost, "
+                  f"recovery {r.recovery_seconds:.2f}s (compile "
+                  f"{r.compile_seconds:.2f}s, cache_hit={r.cache_hit})")
+        if not sup.reports:
+            print("elastic: no failure fired (check --elastic-fail-at)")
+            return 2
+        return 0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -72,6 +166,21 @@ def main(argv=None):
                     "(simulated devices), 'spmd' lowers the compiled "
                     "plan to jit+shard_map over faked host XLA devices "
                     "(runtime.spmd) and reports measured step time")
+    # elastic fault tolerance (repro.ft.elastic): run a short training
+    # loop on the replayed --strategy, kill a rank mid-run, and let the
+    # supervisor shrink the mesh, recompile, restore and resume
+    ap.add_argument("--elastic", action="store_true",
+                    help="with --strategy and --backend: train a few "
+                    "steps, kill one rank mid-run, and recover by "
+                    "recompiling the same strategy for the shrunk mesh "
+                    "(docs/elasticity.md has a quickstart)")
+    ap.add_argument("--elastic-steps", type=int, default=8)
+    ap.add_argument("--elastic-fail-at", type=int, default=None,
+                    help="step at which the rank dies "
+                    "(default: elastic-steps // 2)")
+    ap.add_argument("--elastic-kill-rank", type=int, default=None,
+                    help="which logical rank dies (default: last)")
+    ap.add_argument("--elastic-ckpt-every", type=int, default=3)
     # strategy autotuner (repro.tune): pick PP schedule / microbatches /
     # ZeRO / EP for the FULL config before training the reduced one
     ap.add_argument("--autotune", action="store_true",
@@ -103,6 +212,10 @@ def main(argv=None):
 
     if args.backend and not args.strategy:
         print("--backend needs a --strategy document to execute")
+        return 2
+    if args.elastic and not (args.strategy and args.backend):
+        print("--elastic needs --strategy and --backend "
+              "(reference or spmd)")
         return 2
 
     if args.strategy:
@@ -168,6 +281,9 @@ def main(argv=None):
             # execution materializes them (small: the REDUCED config)
             batch = tune.synth_batch(prog2)
             params_real = tune.materialize_params(prog2.params)
+            if args.elastic:
+                return run_elastic(prog2, params_real,
+                                   exec_cfg.vocab, args)
             if args.backend == "spmd":
                 from repro.runtime.spmd import SpmdExecutor
                 ex = SpmdExecutor(prog2, params=params_real)

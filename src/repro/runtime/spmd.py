@@ -76,7 +76,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -197,7 +197,8 @@ class SpmdExecutor:
     def __init__(self, prog: CompiledProgram,
                  params: Optional[dict[str, Any]] = None, *,
                  gate_compute: bool = True,
-                 gather_limit: Optional[int] = None) -> None:
+                 gather_limit: Optional[int] = None,
+                 physical_devices: Optional[Sequence[int]] = None) -> None:
         # hang detection: reject invalid comm orders BEFORE tracing —
         # the dynamic analogue is a rendezvous deadlock on real ranks
         validate_comm_order(prog.dag, prog.plan)
@@ -218,7 +219,27 @@ class SpmdExecutor:
                 "ensure_host_devices(n) BEFORE jax initializes (tests use "
                 "a subprocess with XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={self.n})")
-        self.mesh = XlaMesh(np.array(avail[:self.n]), (AXIS,))
+        if physical_devices is not None:
+            # elastic recovery: map the n logical plan ranks onto the
+            # SURVIVING physical devices (by jax.devices() index), so a
+            # shrunk-world program never touches the failed chip
+            phys = [int(p) for p in physical_devices]
+            if len(phys) != self.n:
+                raise SpmdBackendError(
+                    f"plan spans {self.n} devices but physical_devices "
+                    f"names {len(phys)}: {phys}")
+            bad = [p for p in phys if not 0 <= p < len(avail)]
+            if bad or len(set(phys)) != len(phys):
+                raise SpmdBackendError(
+                    f"physical_devices must be {len(phys)} distinct "
+                    f"indices into jax.devices() (0..{len(avail)-1}), "
+                    f"got {phys}")
+            chosen = [avail[p] for p in phys]
+        else:
+            chosen = avail[:self.n]
+        self.physical_devices = tuple(
+            d.id if hasattr(d, "id") else i for i, d in enumerate(chosen))
+        self.mesh = XlaMesh(np.array(chosen), (AXIS,))
         self._built: dict[tuple, _Built] = {}
         # feed resolution reuses the interpreter's input distribution
         # rules verbatim (one source of truth for microbatch slicing)

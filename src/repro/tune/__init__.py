@@ -19,6 +19,7 @@ from .measured import (CalibrationResult, MeasuredCell, calibrate,
 from .proxy import (build_candidate_program, build_strategy_program,
                     candidate_directives, candidate_strategy, decompose,
                     make_chunk_cost)
+from .rebalance import rebalance_microbatches
 from .search import (DEFAULT_TOKENS, NoFeasiblePlanError, Plan, Score,
                      score_candidate, score_strategy, search)
 from .space import (REMAT_POLICIES, SCHEDULE_KINDS, Candidate, MeshSpec,
@@ -31,6 +32,6 @@ __all__ = [
     "baseline_candidate", "build_candidate_program",
     "build_strategy_program", "calibrate", "candidate_directives",
     "candidate_strategy", "decompose", "fingerprint", "make_chunk_cost",
-    "materialize_params", "measure_program", "score_candidate",
-    "score_strategy", "search", "synth_batch",
+    "materialize_params", "measure_program", "rebalance_microbatches",
+    "score_candidate", "score_strategy", "search", "synth_batch",
 ]

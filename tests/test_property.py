@@ -5,7 +5,10 @@
   plain-JAX oracle;
 - filter algebra: '*' / '-' / omission semantics;
 - schedule generators: every generated table respects the pipeline data
-  dependencies for random (kind, R, M).
+  dependencies for random (kind, R, M);
+- elastic recovery: any surviving-rank subset that admits a shrunk mesh
+  yields a plan that passes validate_comm_order; the ZeRO checkpoint
+  shard remap round-trips bit-exactly across random degree changes.
 """
 import jax
 import jax.numpy as jnp
@@ -129,3 +132,82 @@ class TestRandomStrategyNumerics:
         l, g = mlp_oracle(params, b["x"], b["y"], S)
         assert res.loss == pytest.approx(l, abs=1e-6)
         assert_grads_close(res.grads, g)
+
+
+class TestElasticProperties:
+    @given(pp=st.sampled_from([2, 4]),
+           dp=st.sampled_from([1, 2]),
+           zero=st.sampled_from([0, 1, 2, 3]),
+           sched=st.sampled_from(["gpipe", "1f1b"]),
+           n_lost=st.integers(1, 6),
+           data=st.data())
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_any_valid_survivor_subset_compiles_clean(
+            self, pp, dp, zero, sched, n_lost, data):
+        """Elastic safety: for ANY random subset of surviving ranks the
+        planner either refuses (ElasticError) or produces a strategy
+        whose recompiled plan passes validate_comm_order — a shrunk
+        world can never be handed a plan that would deadlock."""
+        from repro.core.scheduler import validate_comm_order
+        from repro.core.strategy import Mesh, Pipeline, Strategy, ZeRO
+        from repro.ft import ElasticError, shrink_for_survivors
+
+        world = pp * dp
+        n_lost = min(n_lost, world - 1)
+        lost = data.draw(st.sets(st.integers(0, world - 1),
+                                 min_size=n_lost, max_size=n_lost))
+        survivors = sorted(set(range(world)) - lost)
+        mesh = Mesh(pp=pp, dp=dp)
+        strat = Strategy(mesh, Pipeline(sched, n_mb=2)
+                         | ZeRO(stage=zero)).validate()
+        try:
+            plan = shrink_for_survivors(strat, survivors)
+        except ElasticError:
+            return  # refusing is always safe
+        assert plan.new_mesh.n_devices <= len(survivors)
+        S_mlp = 2 * pp  # stage count pinned under the OLD mesh
+        params = make_mlp_params(jax.random.PRNGKey(0), S_mlp)
+        prog = compile_training(make_mlp_forward(S_mlp), params,
+                                inputs_spec(8), strategy=strat)
+        shrunk = prog.recompile(strategy=plan.strategy)
+        validate_comm_order(shrunk.dag, shrunk.plan)   # raises on hang
+        assert len(shrunk.plan.devices) == plan.new_mesh.n_devices
+
+    @given(shape=st.sampled_from([(1,), (3,), (7, 5), (2, 3, 4), (16,),
+                                  (1, 1)]),
+           dtype=st.sampled_from(["float32", "float64", "int32",
+                                  "uint8"]),
+           old=st.integers(1, 8),
+           new=st.integers(1, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_zero_shard_remap_roundtrips_bitexact(self, shape, dtype,
+                                                  old, new):
+        """Resharding a checkpoint across ZeRO degrees is a placement
+        change, never a numerics change: remap old->new->reassemble must
+        reproduce the original leaf bit for bit (including shapes the
+        degree does not divide, where the codec pads)."""
+        from repro.checkpoint import (remap_shards, shard_leaf,
+                                      unshard_leaf)
+        rng = np.random.default_rng(hash((shape, dtype, old, new))
+                                    & 0xFFFF)
+        if np.issubdtype(np.dtype(dtype), np.integer):
+            arr = rng.integers(0, 100, size=shape).astype(dtype)
+        else:
+            arr = rng.standard_normal(shape).astype(dtype)
+        remapped = remap_shards(shard_leaf(arr, old), new, arr.size)
+        assert len(remapped) == new
+        back = unshard_leaf(remapped, arr.shape, arr.dtype)
+        assert back.tobytes() == arr.tobytes()
+        assert back.dtype == arr.dtype and back.shape == arr.shape
+
+    @given(old=st.integers(1, 6), new=st.integers(1, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_reshard_tree_roundtrips_bitexact(self, old, new):
+        from repro.checkpoint import reshard_tree
+        tree = make_mlp_params(jax.random.PRNGKey(7), 3)
+        out = reshard_tree(tree, old, new)   # verify=True self-checks
+        la = jax.tree_util.tree_leaves(tree)
+        lb = jax.tree_util.tree_leaves(out)
+        assert all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                   for a, b in zip(la, lb))

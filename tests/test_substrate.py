@@ -90,6 +90,18 @@ class TestCheckpoint:
         mgr.wait()
         assert mgr.latest_step() == 1
 
+    def test_extension_dtype_roundtrip(self, tmp_path):
+        # .npy loads ml_dtypes extension dtypes back as raw void
+        # records; restore must reinterpret via the manifest dtype
+        t = {"w": jnp.linspace(-2.0, 2.0, 8).astype(jnp.bfloat16),
+             "b": jnp.ones((3,), jnp.float32)}
+        save_tree(t, tmp_path / "ck")
+        got = restore_tree(t, tmp_path / "ck")
+        assert got["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(t["w"]).view(np.uint16),
+                                      np.asarray(got["w"]).view(np.uint16))
+        np.testing.assert_array_equal(t["b"], got["b"])
+
 
 class TestSupervisor:
     def _setup(self, tmp_path, fail_at=()):
@@ -141,6 +153,49 @@ class TestSupervisor:
             wd.observe(0, 0.1)
         assert wd.observe(11, 0.5) is True
         assert len(wd.events) == 1
+
+    def test_checkpoint_persists_stream_position(self, tmp_path):
+        # the restart contract: every checkpoint carries the loader
+        # position, and it equals the checkpoint step
+        sup, state, fn = self._setup(tmp_path)
+        sup.run(state, fn, 12, log_every=0)
+        for step in (5, 10, 12):
+            _, extra = sup.ckpt.restore(
+                {"params": jnp.zeros((3,)),
+                 "step": jnp.zeros((), jnp.int32)}, step=step)
+            assert int(extra["step"]) == step
+            assert int(extra["data"]["step"]) == step
+
+    def test_restore_rejects_stale_stream_position(self, tmp_path):
+        from repro.ft import StreamPositionError, check_stream_position
+        with pytest.raises(StreamPositionError, match="skip or replay"):
+            check_stream_position({"step": 5, "data": {"step": 3}})
+        with pytest.raises(StreamPositionError, match="no data-stream"):
+            check_stream_position({"step": 5})
+        assert check_stream_position({"step": 5,
+                                      "data": {"step": 5}}) == 5
+        # end to end: a checkpoint written with a desynced loader state
+        # fails the restore instead of resuming on the wrong samples
+        sup, state, fn = self._setup(tmp_path, fail_at=(3,))
+        sup.ckpt.save(2, {"params": jnp.full((3,), 2.0),
+                          "step": jnp.full((), 2, jnp.int32)},
+                      extra={"data": {"step": 1, "epoch": 0, "seed": 1}})
+        with pytest.raises(StreamPositionError):
+            sup.run(state, fn, 12, log_every=0)
+
+    def test_failure_before_first_checkpoint_rewinds_stream(
+            self, tmp_path):
+        # fail BEFORE the first checkpoint: the restart must rewind the
+        # data stream to its pristine position along with the model
+        # state (the old supervisor kept the advanced loader, silently
+        # training a from-scratch run on the wrong sample order)
+        sup, state, fn = self._setup(tmp_path, fail_at=(3,))
+        out = sup.run(state, fn, 12, log_every=0)
+        assert int(out["step"]) == 12
+        assert float(out["params"][0]) == 12.0
+        # 3 pre-failure batches were rewound: the loader's final
+        # position reflects exactly the 12 kept steps
+        assert int(sup.loader.state_dict()["step"]) == 12
 
 
 class TestOptim:
