@@ -44,9 +44,10 @@ def main(argv=None) -> None:
         smoke.main(args.smoke_out)
         return
 
-    from . import (bench_elastic, bench_kernels, bench_overlap,
-                   bench_parity, bench_pp_schedules, bench_pp_zero,
-                   bench_remat, bench_scaling, bench_spmd_parity)
+    from . import (bench_chaos, bench_elastic, bench_kernels,
+                   bench_overlap, bench_parity, bench_pp_schedules,
+                   bench_pp_zero, bench_remat, bench_scaling,
+                   bench_spmd_parity)
     sections = [
         ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
          bench_pp_schedules.main),
@@ -58,6 +59,8 @@ def main(argv=None) -> None:
          bench_spmd_parity.main),
         ("PR6: elastic recovery steps-lost / wall-time grid",
          bench_elastic.main),
+        ("PR7: chaos soak — fault-schedule recovery accounting",
+         bench_chaos.main),
         ("Table1+Fig8: PP x ZeRO support + peak memory",
          bench_pp_zero.main),
         ("Table2: DP ZeRO-1 parity + dispatch overhead",

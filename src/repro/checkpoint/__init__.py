@@ -1,9 +1,11 @@
 """Sharded checkpointing with async writes + elastic restore, and the
 ZeRO shard remap codec for data-parallel degree changes."""
-from .manager import CheckpointManager, restore_tree, save_tree
+from .manager import (CheckpointManager, CorruptCheckpointError,
+                      load_manifest, restore_tree, save_tree)
 from .reshard import (ReshardError, remap_shards, reshard_tree,
                       shard_leaf, shard_tree, unshard_leaf, unshard_tree)
 
-__all__ = ["CheckpointManager", "ReshardError", "remap_shards",
-           "reshard_tree", "restore_tree", "save_tree", "shard_leaf",
-           "shard_tree", "unshard_leaf", "unshard_tree"]
+__all__ = ["CheckpointManager", "CorruptCheckpointError", "ReshardError",
+           "load_manifest", "remap_shards", "reshard_tree",
+           "restore_tree", "save_tree", "shard_leaf", "shard_tree",
+           "unshard_leaf", "unshard_tree"]

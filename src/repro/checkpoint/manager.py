@@ -3,6 +3,14 @@ hashes; optional async background writes; elastic restore (a checkpoint
 saved under one mesh restores under any other — arrays are stored
 unsharded per leaf and re-placed with the target shardings).
 
+Crash safety: every save builds the full checkpoint under a ``.tmp``
+sibling and publishes it with one atomic ``rename``; the manifest itself
+is written via temp-file + ``os.replace`` and carries a *content digest*
+(sha256 over the canonical per-leaf hash table), so a kill mid-save can
+never leave a half-written checkpoint that a later restore picks up, and
+a flipped byte anywhere in the data or the manifest is detected
+(``CorruptCheckpointError``) rather than silently restored.
+
 At real multi-host scale each host writes only its shard slice; on this
 single-host container the full leaves are written, but the manifest
 format (leaf path -> file, shape, dtype, sha256) and the restore path
@@ -12,6 +20,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import pathlib
 import shutil
 import threading
@@ -20,6 +29,15 @@ from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(IOError):
+    """A checkpoint failed integrity verification: a leaf's bytes do not
+    match its manifest sha256, the manifest's content digest does not
+    match its leaf table, or a leaf file is missing/unreadable.  The
+    elastic supervisor treats this as a *skippable* fault — restore
+    falls back to the next-older checkpoint (see
+    ``ElasticSupervisor``/``CheckpointManager.restore``)."""
 
 
 def _leaf_name(path) -> str:
@@ -32,6 +50,28 @@ def _leaf_name(path) -> str:
         else:
             parts.append(str(k))
     return "__".join(parts) or "leaf"
+
+
+def _content_digest(leaves: dict) -> str:
+    """sha256 over the canonical JSON of the per-leaf hash table — one
+    digest that covers every leaf's bytes, shape and dtype, so manifest
+    tampering (or torn writes) is as detectable as data corruption."""
+    canon = json.dumps(leaves, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def _write_manifest(directory: pathlib.Path, manifest: dict,
+                    fsync: bool = False) -> None:
+    # temp + os.replace: readers never observe a torn manifest even if
+    # the writer dies mid-write
+    tmp = directory / "manifest.json.tmp"
+    data = json.dumps(manifest, indent=1)
+    with open(tmp, "w") as f:
+        f.write(data)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, directory / "manifest.json")
 
 
 def save_tree(tree, directory: pathlib.Path, extra: Optional[dict] = None,
@@ -49,15 +89,40 @@ def save_tree(tree, directory: pathlib.Path, extra: Optional[dict] = None,
         arr = np.asarray(leaf)
         fn = f"{name}.npy"
         np.save(tmp / fn, arr)
+        if fsync:
+            fd = os.open(tmp / fn, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
         manifest["leaves"][name] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
         }
     manifest["treedef"] = str(treedef)
-    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    manifest["digest"] = _content_digest(manifest["leaves"])
+    _write_manifest(tmp, manifest, fsync=fsync)
     if directory.exists():
         shutil.rmtree(directory)
     tmp.rename(directory)   # atomic publish
+    return manifest
+
+
+def load_manifest(directory: pathlib.Path) -> dict:
+    """Read + integrity-check a checkpoint manifest.  Raises
+    ``CorruptCheckpointError`` on a missing/torn/tampered manifest."""
+    directory = pathlib.Path(directory)
+    try:
+        manifest = json.loads((directory / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"unreadable manifest under {directory}: {e}") from e
+    want = manifest.get("digest")
+    # pre-digest manifests (older checkpoints) stay restorable: per-leaf
+    # sha256 verification below still covers the data
+    if want is not None and _content_digest(manifest["leaves"]) != want:
+        raise CorruptCheckpointError(
+            f"manifest content digest mismatch under {directory}")
     return manifest
 
 
@@ -67,7 +132,7 @@ def restore_tree(tree_like, directory: pathlib.Path, *,
     ``shardings``: optional matching pytree of NamedShardings for elastic
     re-placement under a (possibly different) mesh."""
     directory = pathlib.Path(directory)
-    manifest = json.loads((directory / "manifest.json").read_text())
+    manifest = load_manifest(directory)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     sh_flat = (jax.tree_util.tree_leaves(shardings)
                if shardings is not None else [None] * len(flat))
@@ -75,7 +140,11 @@ def restore_tree(tree_like, directory: pathlib.Path, *,
     for (path, leaf), sh in zip(flat, sh_flat):
         name = _leaf_name(path)
         meta = manifest["leaves"][name]
-        arr = np.load(directory / meta["file"])
+        try:
+            arr = np.load(directory / meta["file"])
+        except (OSError, ValueError) as e:
+            raise CorruptCheckpointError(
+                f"unreadable leaf {name} under {directory}: {e}") from e
         want = np.dtype(meta["dtype"])
         if arr.dtype != want and arr.dtype.kind == "V" \
                 and arr.dtype.itemsize == want.itemsize:
@@ -86,7 +155,8 @@ def restore_tree(tree_like, directory: pathlib.Path, *,
         if verify:
             digest = hashlib.sha256(arr.tobytes()).hexdigest()
             if digest != meta["sha256"]:
-                raise IOError(f"checkpoint corruption in {name}")
+                raise CorruptCheckpointError(
+                    f"checkpoint corruption in {name}")
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {name}: "
                              f"{arr.shape} vs {leaf.shape}")
@@ -98,17 +168,25 @@ def restore_tree(tree_like, directory: pathlib.Path, *,
 
 class CheckpointManager:
     """Step-indexed checkpoints under root/step_{n}; keeps the newest
-    ``keep`` checkpoints; optional async writer thread."""
+    ``keep`` checkpoints; optional async writer thread; ``fsync=True``
+    forces leaf + manifest data to disk before the atomic publish (off
+    by default — the tests' faked faults don't power-cycle the host)."""
 
-    def __init__(self, root, keep: int = 3, async_save: bool = True):
+    def __init__(self, root, keep: int = 3, async_save: bool = True,
+                 fsync: bool = False):
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
+        self.fsync = fsync
         self._thread: Optional[threading.Thread] = None
 
     def _dir(self, step: int) -> pathlib.Path:
         return self.root / f"step_{step:08d}"
+
+    def step_dir(self, step: int) -> pathlib.Path:
+        """Public path accessor (used by chaos corruption helpers)."""
+        return self._dir(step)
 
     def _steps_on_disk(self) -> list:
         # strict name filter: an in-flight save's "step_N.tmp" directory
@@ -122,9 +200,35 @@ class CheckpointManager:
                 steps.append(int(suffix))
         return sorted(steps)
 
+    def steps(self) -> list:
+        """Published checkpoint steps, oldest first (waits for any
+        in-flight async save so the newest step is visible)."""
+        self.wait()
+        return self._steps_on_disk()
+
     def latest_step(self) -> Optional[int]:
         steps = self._steps_on_disk()
         return steps[-1] if steps else None
+
+    def verify(self, step: int) -> bool:
+        """True iff the checkpoint at ``step`` passes full integrity
+        verification (manifest digest + every leaf's sha256)."""
+        self.wait()
+        d = self._dir(step)
+        try:
+            manifest = load_manifest(d)
+            for name, meta in manifest["leaves"].items():
+                arr = np.load(d / meta["file"])
+                want = np.dtype(meta["dtype"])
+                if arr.dtype != want and arr.dtype.kind == "V" \
+                        and arr.dtype.itemsize == want.itemsize:
+                    arr = arr.view(want)
+                if hashlib.sha256(arr.tobytes()).hexdigest() \
+                        != meta["sha256"]:
+                    return False
+        except (CorruptCheckpointError, OSError, ValueError, KeyError):
+            return False
+        return True
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -137,7 +241,8 @@ class CheckpointManager:
         extra = dict(extra or {}, step=step)
 
         def work():
-            save_tree(host_tree, self._dir(step), extra=extra)
+            save_tree(host_tree, self._dir(step), extra=extra,
+                      fsync=self.fsync)
             self._gc()
 
         self.wait()
@@ -154,7 +259,7 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = self._dir(step)
-        manifest = json.loads((d / "manifest.json").read_text())
+        manifest = load_manifest(d)
         tree = restore_tree(tree_like, d, shardings=shardings)
         return tree, manifest["extra"]
 

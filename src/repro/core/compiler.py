@@ -139,6 +139,13 @@ def compile_training(
     for directive in directives:
         directive.apply(dag)
 
+    pipe = strategy.pipeline
+    if pipe is not None and pipe.mb_split is not None:
+        # scheduling metadata only: cost models and the dispatcher read
+        # the per-rank microbatch assignment here; the lowered numerics
+        # are bit-identical with or without it (see Pipeline docstring)
+        dag.meta["mb_split"] = pipe.mb_split_dict()
+
     passes.run_all(dag, overlap=overlap, offload=offload)
     plan = build_plan(dag)
     prog = CompiledProgram(dag=dag, plan=plan, params=params,

@@ -37,7 +37,8 @@ re-derived, never guessed at.
 
 Version history: 1 = PR 3 (Pipeline/ZeRO/ExpertParallel/Overlap);
 2 = PR 4 (adds Remat + Offload kinds, Pipeline.cap_offset,
-RawDirectives.split_backward).
+RawDirectives.split_backward); 3 = PR 7 (adds Pipeline.mb_split, the
+straggler-rebalance per-rank microbatch assignment).
 """
 from __future__ import annotations
 
@@ -52,7 +53,7 @@ from .filters import F
 from .overlap import OverlapConfig
 from .passes import REMAT_POLICIES
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # the five generative PP schedule builders in core/schedules.py; kept
 # here (and re-exported by tune.space) so strategy validation does not
@@ -261,7 +262,19 @@ class Pipeline(Fragment):
     ``n_stages`` defaults to the repo convention of 2 stages per rank
     (so every kind runs the same fine-grained model and makespans stay
     apples-to-apples).  ``split_backward=None`` derives the ZeroBubble
-    Bi/Bw split from the kind (dualpipev / zb1f1b need it)."""
+    Bi/Bw split from the kind (dualpipev / zb1f1b need it).
+
+    ``mb_split`` is the straggler-rebalance assignment: an optional
+    ``{rank: microbatch_count}`` mapping (counts sum to ``n_mb``)
+    produced by ``tune.rebalance_microbatches`` and applied mid-run by
+    ``ft.elastic.ElasticSupervisor`` as a *recompile* of the same
+    fragments.  It is scheduling metadata — the lowered plan records it
+    in ``dag.meta['mb_split']`` for cost models and the (future) MPMD
+    dispatcher, and the compiled numerics are bit-identical with or
+    without it.  Rank ids refer to THIS strategy's mesh, so
+    ``for_mesh`` drops the split on any mesh change (a rebalance is a
+    property of one concrete world; it is re-derived after an elastic
+    shrink or regrowth)."""
     kind = "pipeline"
 
     schedule: str = "1f1b"
@@ -273,6 +286,24 @@ class Pipeline(Fragment):
     # dualpipev in-flight microbatch headroom beyond 2*(R-r); None keeps
     # the builder's tuned default (schedules.DUALPIPEV_CAP_OFFSET = 6)
     cap_offset: Optional[int] = None
+    # ((rank, count), ...) or None — see class docstring
+    mb_split: Optional[tuple] = None
+
+    def __post_init__(self):
+        s = self.mb_split
+        if isinstance(s, dict):
+            s = tuple(sorted((int(r), int(c)) for r, c in s.items()))
+        elif s is not None:
+            try:
+                s = tuple(sorted((int(r), int(c)) for r, c in s))
+            except (TypeError, ValueError):
+                raise StrategyError(
+                    f"fragment Pipeline: mb_split must map ranks to "
+                    f"microbatch counts, got {self.mb_split!r}") from None
+        object.__setattr__(self, "mb_split", s)
+
+    def mb_split_dict(self) -> Optional[dict]:
+        return dict(self.mb_split) if self.mb_split is not None else None
 
     def validate(self, strategy: "Strategy") -> None:
         if self.schedule not in SCHEDULE_KINDS:
@@ -299,6 +330,26 @@ class Pipeline(Fragment):
             raise StrategyError(
                 f"fragment {self!r}: dualpipev V-placement requires "
                 f"n_stages == 2*{self.axis} (got {S} != {2 * pp})")
+        if self.mb_split is not None:
+            ranks = [r for r, _ in self.mb_split]
+            counts = [c for _, c in self.mb_split]
+            if len(set(ranks)) != len(ranks):
+                raise StrategyError(
+                    f"fragment {self!r}: mb_split names duplicate ranks")
+            bad = [r for r in ranks if not 0 <= r < mesh.n_devices]
+            if bad:
+                raise StrategyError(
+                    f"fragment {self!r}: mb_split ranks {bad} outside "
+                    f"mesh of {mesh.n_devices} devices")
+            if any(c < 0 for c in counts):
+                raise StrategyError(
+                    f"fragment {self!r}: mb_split counts must be >= 0")
+            if sum(counts) != self.n_mb:
+                raise StrategyError(
+                    f"fragment {self!r}: mb_split counts sum to "
+                    f"{sum(counts)}, not n_mb={self.n_mb} (the split "
+                    "re-assigns microbatches, it never changes their "
+                    "number)")
 
     def stages(self, mesh: Mesh) -> int:
         return self.n_stages if self.n_stages is not None \
@@ -636,8 +687,14 @@ class Strategy:
                 "structured fragments")
         frags = []
         for f in self.fragments:
-            if isinstance(f, Pipeline) and f.n_stages is None:
-                f = dataclasses.replace(f, n_stages=f.stages(self.mesh))
+            if isinstance(f, Pipeline):
+                if f.n_stages is None:
+                    f = dataclasses.replace(f, n_stages=f.stages(self.mesh))
+                if f.mb_split is not None:
+                    # a rebalance split names ranks of the OLD world; any
+                    # mesh change invalidates it — regrown/shrunk worlds
+                    # start from the uniform split again
+                    f = dataclasses.replace(f, mb_split=None)
             frags.append(f)
         return Strategy(mesh, tuple(frags)).validate()
 
@@ -826,7 +883,8 @@ class Strategy:
         pipe, zero, ep, ov = (self.pipeline, self.zero,
                               self.expert_parallel, self.overlap)
         if pipe:
-            parts.append(f"{pipe.schedule}/mb{pipe.n_mb}")
+            parts.append(f"{pipe.schedule}/mb{pipe.n_mb}"
+                         + ("/rb" if pipe.mb_split is not None else ""))
         if zero:
             parts.append(f"zero{zero.stage}")
         if ep:

@@ -37,38 +37,25 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 
-from ..checkpoint import CheckpointManager, reshard_tree
+from ..checkpoint import (CheckpointManager, CorruptCheckpointError,
+                          reshard_tree)
 from ..core.compiler import CompiledProgram
 from ..core.strategy import Mesh, Strategy, StrategyError
-from .supervisor import (FailureInjector, StragglerWatchdog, WorkerFailure,
+# the exception root + unified injectors live in ft.chaos (PR 7);
+# RankFailure / RankFailureInjector are re-exported here so existing
+# `from repro.ft.elastic import RankFailure` callers keep working
+from .chaos import (ChaosInjector, ChaosReport, FaultSchedule,
+                    NumericalFailure, RankFailure, RankFailureInjector,
+                    WorkerFailure, check_numerics, corrupt_latest)
+from .regrow import GrowthPlan, GrowthReport, RegrowthError, \
+    grow_for_arrivals
+from .supervisor import (FailureInjector, StragglerWatchdog,
                          check_stream_position)
 
 
 class ElasticError(RuntimeError):
     """Elastic recovery could not proceed (no valid shrunk mesh, failure
     budget exhausted, or an inconsistent checkpoint)."""
-
-
-class RankFailure(WorkerFailure):
-    """A specific rank died (vs. the anonymous ``WorkerFailure``)."""
-
-    def __init__(self, step: int, rank: int) -> None:
-        super().__init__(f"rank {rank} lost at step {step}")
-        self.step = step
-        self.rank = rank
-
-
-@dataclass
-class RankFailureInjector:
-    """Kill specific ranks at specific steps: ``{step: rank}`` (each
-    fires once).  The elastic test harness's kill switch."""
-    fail_at: dict = field(default_factory=dict)
-    _fired: set = field(default_factory=set)
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at and step not in self._fired:
-            self._fired.add(step)
-            raise RankFailure(step, int(self.fail_at[step]))
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +185,27 @@ class RecoveryReport:
         return dict(self.__dict__)
 
 
+@dataclass
+class RebalanceReport:
+    """One mid-run microbatch rebalance: the supervisor consumed its own
+    ``rebalance_proposal()`` as a recompile at a checkpoint boundary.
+    Numerics-neutral by construction (``Pipeline.mb_split`` is
+    scheduling metadata), so no steps are lost."""
+    step: int
+    split: dict
+    slowdowns: dict
+    compile_seconds: float
+    cache_hit: bool
+
+    def to_dict(self) -> dict:
+        return {"step": self.step,
+                "split": {int(k): int(v) for k, v in self.split.items()},
+                "slowdowns": {int(k): float(v)
+                              for k, v in self.slowdowns.items()},
+                "compile_seconds": self.compile_seconds,
+                "cache_hit": self.cache_hit}
+
+
 class ElasticSupervisor:
     """GlobalPlan-aware fault-tolerant training loop.
 
@@ -219,9 +227,13 @@ class ElasticSupervisor:
                  loader, *, runner_factory: Callable,
                  update: Optional[Callable] = None,
                  checkpoint_every: int = 10,
-                 injector: Optional[RankFailureInjector] = None,
+                 injector: Optional[ChaosInjector] = None,
                  watchdog: Optional[StragglerWatchdog] = None,
-                 max_failures: int = 4) -> None:
+                 max_failures: int = 4,
+                 health_check: bool = True,
+                 rebalance: bool = False,
+                 rebalance_patience: int = 2,
+                 rebalance_cooldown: Optional[int] = None) -> None:
         if prog.strategy is None or prog.strategy.mesh is None:
             raise ElasticError(
                 "ElasticSupervisor needs a program compiled from a "
@@ -236,17 +248,38 @@ class ElasticSupervisor:
         self.injector = injector
         self.watchdog = watchdog or StragglerWatchdog()
         self.max_failures = max_failures
+        self.health_check = bool(health_check)
+        self.rebalance = bool(rebalance)
+        self.rebalance_patience = int(rebalance_patience)
+        # default cooldown: one checkpoint interval — at most one
+        # recompile per boundary even under a persistently noisy EMA
+        self.rebalance_cooldown = (int(rebalance_cooldown)
+                                   if rebalance_cooldown is not None
+                                   else self.every)
         self.failures = 0
         self.world = self.strategy.mesh.n_devices
         # logical rank -> physical device index; recovery drops the dead
         # physical device and keeps a dense logical numbering
         self.physical: list[int] = list(range(self.world))
+        # standby pool: spare physical devices a shrink idled plus any
+        # scripted/real arrivals — regrowth draws from here
+        self.standby: list[int] = []
         # plan cache: strategy document -> compiled program, so a repeat
         # failure at an already-seen world size skips the compile
         self._compiled: dict[str, CompiledProgram] = {
             self.strategy.to_json(): prog}
         self.history: list[dict] = []
         self.reports: list[RecoveryReport] = []
+        self.growths: list[GrowthReport] = []
+        self.rebalances: list[RebalanceReport] = []
+        self.numeric_rewinds = 0
+        self.corrupt_detected = 0
+        self.corrupt_skipped_steps: list[int] = []
+        # rebalance hysteresis: a proposal must persist this many
+        # consecutive checkpoint boundaries before we act on it
+        self._rb_streak = 0
+        self._rb_pending: Optional[dict] = None
+        self._rb_last_step = -10 ** 9
 
     # -- plan cache ---------------------------------------------------------
     def prewarm(self, n_failures: int = 1) -> int:
@@ -300,13 +333,26 @@ class ElasticSupervisor:
             try:
                 if self.injector is not None:
                     self.injector.check(step)
+                    arrived = self._injected_arrivals(step)
+                    if arrived:
+                        params, runner = self._regrow(step, arrived,
+                                                      params, runner)
                 batch = self.loader.next_batch()
                 t0 = time.time()
                 res = runner.run(batch)
                 dt = time.time() - t0
-                params = self.update(params, res.grads, step)
+                grads = res.grads
+                if self.injector is not None and \
+                        hasattr(self.injector, "poison_grads"):
+                    grads, _ = self.injector.poison_grads(step, grads)
+                if self.health_check:
+                    # sentinel BEFORE the optimizer boundary: a
+                    # non-finite loss/grad must never touch the weights
+                    check_numerics(step, res.loss, grads)
+                params = self.update(params, grads, step)
                 runner.params = params
                 self.watchdog.observe(step, dt)
+                self._observe_ranks(step, dt)
                 step += 1
                 self.history.append({"step": step,
                                      "loss": float(res.loss),
@@ -322,11 +368,51 @@ class ElasticSupervisor:
                                "world": self.world,
                                "zero_shards":
                                    zero_shard_degree(self.strategy)})
+                    self._injected_corruptions(step)
+                    if self.rebalance and step != n_steps:
+                        new = self._maybe_rebalance(step, params)
+                        if new is not None:
+                            runner = new
+            except NumericalFailure as e:
+                # rewind-only: the world is intact, the weights are not
+                params, runner, step = self._rewind(
+                    e, step, params, runner, init_params,
+                    init_loader_state)
             except WorkerFailure as e:
                 params, runner, step = self._recover(
                     e, step, params, init_params, init_loader_state)
         self.ckpt.wait()
         return params
+
+    def _injected_arrivals(self, step: int) -> list:
+        if hasattr(self.injector, "arrivals"):
+            return list(self.injector.arrivals(step))
+        return []
+
+    def _injected_corruptions(self, step: int) -> None:
+        """Execute scripted checkpoint bit-rot (the fault itself, not
+        its detection — restore's digest check is what must catch it)."""
+        if not hasattr(self.injector, "corruptions"):
+            return
+        for ev in self.injector.corruptions(step):
+            self.ckpt.wait()
+            corrupted = corrupt_latest(
+                self.ckpt, flips=ev.flips,
+                seed=getattr(self.injector, "schedule",
+                             FaultSchedule()).seed)
+            print(f"  [chaos] corrupted checkpoint step_{corrupted} "
+                  f"({ev.flips} byte flips)", flush=True)
+
+    def _observe_ranks(self, step: int, dt: float) -> None:
+        """Feed per-rank wall-clock into the watchdog; a scripted
+        straggle window inflates its rank's observed time (the detection
+        path is the watchdog's own median-of-others EMA logic)."""
+        delay = getattr(self.injector, "delay_factor", None)
+        if delay is None:
+            return
+        for rank in range(self.world):
+            self.watchdog.observe_rank(rank, step,
+                                       dt * delay(rank, step))
 
     # -- recovery -----------------------------------------------------------
     def _recover(self, failure: WorkerFailure, step_failed: int,
@@ -363,24 +449,22 @@ class ElasticSupervisor:
 
         # surviving physical devices, in rank order; the shrunk world
         # takes the first new_world of them (dense logical renumbering)
+        # and the rest join the standby pool for a later regrowth
         alive = [p for i, p in enumerate(self.physical)
                  if i != failed_rank]
         new_phys = alive[:new_world]
+        spares = alive[new_world:]
 
-        # 3. restore params + stream position from the last checkpoint
-        latest = self.ckpt.latest_step()
-        if latest is None:
+        # 3. restore params + stream position from the newest GOOD
+        # checkpoint (corrupt ones are detected by the manifest digest
+        # and skipped)
+        restored = self._restore_latest(live_params)
+        if restored is None:
             params = init_params
             self.loader.load_state_dict(dict(init_loader_state))
             resume = 0
         else:
-            self.ckpt.wait()       # the async write may still be in flight
-            # restore against the LIVE params tree: its leaves are the
-            # concrete arrays whose dtypes were saved.  ``prog.params``
-            # may hold abstract proxy specs (e.g. bfloat16 avals) that
-            # numpy cannot cast a loaded array into.
-            state, extra = self.ckpt.restore({"params": live_params},
-                                             step=latest)
+            state, extra = restored
             resume = check_stream_position(extra)
             self.loader.load_state_dict(extra["data"])
             params = state["params"]
@@ -395,6 +479,9 @@ class ElasticSupervisor:
         self.strategy = plan.strategy
         self.world = new_world
         self.physical = new_phys
+        self.standby.extend(spares)
+        self.watchdog.reset_ranks()
+        self._rb_streak, self._rb_pending = 0, None
         runner = self.runner_factory(new_prog, params, tuple(new_phys))
         report = RecoveryReport(
             step_failed=step_failed, resume_step=resume,
@@ -411,7 +498,230 @@ class ElasticSupervisor:
               f"{', plan cache hit' if cache_hit else ''})", flush=True)
         return params, runner, resume
 
+    def _restore_latest(self, live_params: dict[str, Any]):
+        """Restore the newest checkpoint that passes integrity
+        verification, skipping (and recording) corrupt ones.  Returns
+        ``(state, extra)`` or None when no good checkpoint exists."""
+        self.ckpt.wait()       # an async write may still be in flight
+        for step in reversed(self.ckpt.steps()):
+            try:
+                # restore against the LIVE params tree: its leaves are
+                # the concrete arrays whose dtypes were saved.
+                # ``prog.params`` may hold abstract proxy specs (e.g.
+                # bfloat16 avals) that numpy cannot cast a loaded array
+                # into.
+                return self.ckpt.restore({"params": live_params},
+                                         step=step)
+            except CorruptCheckpointError as e:
+                self.corrupt_detected += 1
+                self.corrupt_skipped_steps.append(step)
+                print(f"  [elastic] checkpoint step_{step} failed "
+                      f"integrity check ({e}) — falling back to the "
+                      f"previous one", flush=True)
+        return None
+
+    # -- regrowth -----------------------------------------------------------
+    def _regrow(self, step: int, arrived: Sequence[int],
+                params: dict[str, Any], runner) -> tuple:
+        """Grow the world onto survivors + standby + ``arrived``
+        devices.  Params are LIVE (no restore, no lost steps): the same
+        weights are resharded UP across the ZeRO degree change and the
+        runner is rebuilt on the wider device set.  When no larger mesh
+        validates, the arrivals just join the standby pool."""
+        self.standby.extend(int(d) for d in arrived)
+        t_start = time.time()
+        old_world = self.world
+        n_avail = old_world + len(self.standby)
+        try:
+            plan = grow_for_arrivals(self.strategy, n_avail)
+        except RegrowthError:
+            print(f"  [elastic] {len(arrived)} arrival(s) at step "
+                  f"{step} banked in standby (no larger valid mesh for "
+                  f"{n_avail} ranks)", flush=True)
+            return params, runner
+        new_world = plan.new_mesh.n_devices
+
+        key = plan.strategy.to_json()
+        cache_hit = key in self._compiled
+        t_c = time.time()
+        if not cache_hit:
+            self._compiled[key] = self.prog.recompile(
+                strategy=plan.strategy)
+        compile_seconds = 0.0 if cache_hit else time.time() - t_c
+        new_prog = self._compiled[key]
+
+        # survivors keep their slots; replacements fill the new ranks
+        needed = new_world - old_world
+        new_phys = list(self.physical) + self.standby[:needed]
+        self.standby = self.standby[needed:]
+
+        old_deg = zero_shard_degree(self.strategy)
+        new_deg = zero_shard_degree(plan.strategy)
+        if old_deg != new_deg:
+            # remap ZeRO shards UP in DP degree — the same bit-exact
+            # codec that mapped them down at shrink time
+            params = reshard_tree(params, old_deg, new_deg)
+
+        self.strategy = plan.strategy
+        self.world = new_world
+        self.physical = new_phys
+        self.watchdog.reset_ranks()
+        self._rb_streak, self._rb_pending = 0, None
+        runner = self.runner_factory(new_prog, params, tuple(new_phys))
+        report = GrowthReport(
+            step=step, old_world=old_world, new_world=new_world,
+            grown_axis=plan.grown_axis,
+            arrivals=tuple(int(d) for d in arrived), steps_lost=0,
+            recovery_seconds=time.time() - t_start,
+            compile_seconds=compile_seconds, cache_hit=cache_hit)
+        self.growths.append(report)
+        print(f"  [elastic] arrivals {list(arrived)} at step {step} — "
+              f"world {old_world}->{new_world} (grew "
+              f"{plan.grown_axis}), 0 steps lost"
+              f"{', plan cache hit' if cache_hit else ''}", flush=True)
+        return params, runner
+
+    # -- numerical rewind ---------------------------------------------------
+    def _rewind(self, failure: NumericalFailure, step_failed: int,
+                live_params: dict[str, Any], runner,
+                init_params: dict[str, Any],
+                init_loader_state: dict) -> tuple:
+        """Rewind-only recovery for a tripped numerics sentinel: same
+        mesh, same program — restore the newest good checkpoint (the
+        poisoned update never reached the weights, but the weights that
+        PRODUCED the spike are suspect, so we rewind rather than
+        retry)."""
+        self.failures += 1
+        if self.failures > self.max_failures:
+            raise ElasticError(
+                f"failure budget exhausted ({self.max_failures}); "
+                f"last: {failure}") from failure
+        self.numeric_rewinds += 1
+        t_start = time.time()
+        restored = self._restore_latest(live_params)
+        if restored is None:
+            params = init_params
+            self.loader.load_state_dict(dict(init_loader_state))
+            resume = 0
+        else:
+            state, extra = restored
+            resume = check_stream_position(extra)
+            self.loader.load_state_dict(extra["data"])
+            params = state["params"]
+        runner.params = params
+        report = RecoveryReport(
+            step_failed=step_failed, resume_step=resume,
+            steps_lost=step_failed - resume,
+            recovery_seconds=time.time() - t_start,
+            compile_seconds=0.0, cache_hit=True,
+            old_world=self.world, new_world=self.world,
+            failed_rank=-1, shrunk_axis="")
+        self.reports.append(report)
+        print(f"  [elastic] {failure} — rewound to step {resume} on "
+              f"the same mesh ({report.steps_lost} steps lost)",
+              flush=True)
+        return params, runner, resume
+
+    # -- mid-run rebalance --------------------------------------------------
+    def _maybe_rebalance(self, step: int, params: dict[str, Any]):
+        """Consume ``rebalance_proposal()`` at a checkpoint boundary:
+        recompile with the proposed per-rank microbatch split
+        (``Pipeline.mb_split`` — scheduling metadata, numerics
+        bit-identical).
+
+        Hysteresis: act only when a proposal that differs from the
+        current split has persisted ``rebalance_patience`` consecutive
+        boundaries AND ``rebalance_cooldown`` steps have passed since
+        the last rebalance — an oscillating EMA can therefore never
+        thrash recompiles.  A proposal equal to the canonical
+        healthy-fleet split reverts an applied split (back to
+        ``mb_split=None``) under the same hysteresis.  Returns the new
+        runner, or None when nothing changed."""
+        proposal = self.rebalance_proposal()
+        pipe = self.strategy.pipeline
+        if proposal is None or pipe is None:
+            self._rb_streak, self._rb_pending = 0, None
+            return None
+        current = pipe.mb_split_dict()
+        # the on-pace test compares against the CANONICAL healthy-fleet
+        # split, not "all counts equal": with n_mb < world the canonical
+        # split necessarily leaves some ranks at 0, and misreading it as
+        # a skew would recompile healthy fleets forever.  A proposal
+        # equal to the canonical split means revert (mb_split=None) if a
+        # split is applied, else nothing.
+        from ..tune.rebalance import rebalance_microbatches
+        canonical = rebalance_microbatches(
+            pipe.n_mb, {r: 1.0 for r in proposal})
+        effective = None if proposal == canonical else dict(proposal)
+        if effective == current:
+            # on-pace (or already applied) — decay the streak
+            self._rb_streak, self._rb_pending = 0, None
+            return None
+        if effective == self._rb_pending:
+            self._rb_streak += 1
+        else:
+            self._rb_pending = effective
+            self._rb_streak = 1
+        if self._rb_streak < self.rebalance_patience:
+            return None
+        if step - self._rb_last_step < self.rebalance_cooldown:
+            return None
+
+        import dataclasses
+        new_pipe = dataclasses.replace(pipe, mb_split=effective)
+        new_strategy = self.strategy.replacing(new_pipe).validate()
+        key = new_strategy.to_json()
+        cache_hit = key in self._compiled
+        t_c = time.time()
+        if not cache_hit:
+            self._compiled[key] = self.prog.recompile(
+                strategy=new_strategy)
+        compile_seconds = 0.0 if cache_hit else time.time() - t_c
+        self.strategy = new_strategy
+        self._rb_last_step = step
+        self._rb_streak, self._rb_pending = 0, None
+        runner = self.runner_factory(self._compiled[key], params,
+                                     tuple(self.physical))
+        # an empty split records a reversion: the fleet returned to pace
+        # and the default schedule was recompiled back in
+        report = RebalanceReport(
+            step=step, split=effective or {},
+            slowdowns=self.watchdog.slowdowns(),
+            compile_seconds=compile_seconds, cache_hit=cache_hit)
+        self.rebalances.append(report)
+        what = (f"rebalanced microbatches: {effective}"
+                if effective is not None else
+                "reverted microbatch split (fleet back on pace)")
+        print(f"  [elastic] {what} at step {step} (slowdowns "
+              f"{ {k: round(v, 2) for k, v in report.slowdowns.items()} })",
+              flush=True)
+        return runner
+
+    # -- reporting ----------------------------------------------------------
+    def chaos_report(self, steps: int,
+                     wall_seconds: float = 0.0) -> ChaosReport:
+        """Aggregate this run's fault accounting into a ``ChaosReport``
+        (written to benchmarks/results/chaos/ by the soak harness)."""
+        sched = getattr(self.injector, "schedule", None)
+        return ChaosReport(
+            schedule_seed=getattr(sched, "seed", 0),
+            n_events=len(getattr(sched, "events", ())),
+            kinds=sched.kinds() if sched is not None else {},
+            steps=int(steps),
+            final_world=self.world,
+            final_mesh=repr(self.strategy.mesh),
+            recoveries=[r.to_dict() for r in self.reports],
+            growths=[g.to_dict() for g in self.growths],
+            rebalances=[b.to_dict() for b in self.rebalances],
+            numeric_rewinds=self.numeric_rewinds,
+            corrupt_detected=self.corrupt_detected,
+            corrupt_skipped_steps=list(self.corrupt_skipped_steps),
+            steps_lost_total=sum(r.steps_lost for r in self.reports),
+            wall_seconds=float(wall_seconds))
+
 
 __all__ = ["ElasticError", "ElasticPlan", "ElasticSupervisor",
-           "RankFailure", "RankFailureInjector", "RecoveryReport",
-           "shrink_for_survivors", "sgd_update", "zero_shard_degree"]
+           "GrowthPlan", "GrowthReport", "RankFailure",
+           "RankFailureInjector", "RebalanceReport", "RecoveryReport",
+           "RegrowthError", "grow_for_arrivals", "shrink_for_survivors",
+           "sgd_update", "zero_shard_degree"]

@@ -33,27 +33,15 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from ..checkpoint import CheckpointManager
-
-
-class WorkerFailure(RuntimeError):
-    """A (simulated) lost worker / preemption."""
+# exception root + unified injectors live in ft.chaos (PR 7); re-exported
+# here so existing `from repro.ft.supervisor import WorkerFailure,
+# FailureInjector` callers keep working
+from .chaos import FailureInjector, WorkerFailure
 
 
 class StreamPositionError(RuntimeError):
     """A restored checkpoint's data-stream position disagrees with its
     step — resuming would silently skip or replay samples."""
-
-
-@dataclass
-class FailureInjector:
-    """Deterministically fail at the given global steps (once each)."""
-    fail_at: tuple = ()
-    _fired: set = field(default_factory=set)
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at and step not in self._fired:
-            self._fired.add(step)
-            raise WorkerFailure(f"injected failure at step {step}")
 
 
 @dataclass
@@ -96,6 +84,13 @@ class StragglerWatchdog:
         self.rank_ema[rank] = (self.beta * prev + (1 - self.beta) * dt
                                if prev else dt)
         return is_straggler
+
+    def reset_ranks(self) -> None:
+        """Drop the per-rank EMAs (the global step EMA survives).
+        Called on every mesh change — rank ids are renumbered by a
+        shrink/regrowth, so stale EMAs would attribute one world's
+        slowdowns to another world's ranks."""
+        self.rank_ema.clear()
 
     def slowdowns(self) -> dict[int, float]:
         """Per-rank EMA normalized by the fleet median — 1.0 is on-pace;

@@ -80,22 +80,34 @@ class _ProgramLoader:
         self.state = DataState.from_dict(d)
 
 
-def run_elastic(prog, params, vocab: int, args) -> int:
-    """The --elastic demo: train, lose a rank, shrink, resume."""
+def run_elastic(prog, params, vocab: int, args, schedule=None) -> int:
+    """The --elastic demo: train, lose a rank, shrink, resume.  With a
+    --chaos schedule, the scripted faults replace the single kill and
+    the supervisor additionally regrows on arrivals, rewinds on NaN
+    spikes, skips corrupted checkpoints and rebalances microbatches."""
     import shutil
     import tempfile
 
     from repro.checkpoint import CheckpointManager
-    from repro.ft import (ElasticError, ElasticSupervisor,
+    from repro.ft import (ChaosInjector, ElasticError, ElasticSupervisor,
                           RankFailureInjector)
 
     world = prog.strategy.mesh.n_devices
     n_steps = args.elastic_steps
-    fail_at = (args.elastic_fail_at if args.elastic_fail_at is not None
-               else max(1, n_steps // 2))
-    rank = (args.elastic_kill_rank if args.elastic_kill_rank is not None
-            else world - 1)
     loader = _ProgramLoader(prog.input_shapes(), vocab, seed=17)
+
+    if schedule is not None:
+        injector = ChaosInjector(schedule)
+        what = (f"chaos schedule: {len(schedule.events)} events "
+                f"{schedule.kinds()} seed={schedule.seed}")
+    else:
+        fail_at = (args.elastic_fail_at
+                   if args.elastic_fail_at is not None
+                   else max(1, n_steps // 2))
+        rank = (args.elastic_kill_rank
+                if args.elastic_kill_rank is not None else world - 1)
+        injector = RankFailureInjector({fail_at: rank})
+        what = f"rank {rank} dies at step {fail_at}"
 
     if args.backend == "spmd":
         from repro.runtime.spmd import SpmdExecutor
@@ -114,21 +126,50 @@ def run_elastic(prog, params, vocab: int, args) -> int:
             prog, CheckpointManager(ckpt_dir, keep=4, async_save=False),
             loader, runner_factory=runner_factory,
             checkpoint_every=args.elastic_ckpt_every,
-            injector=RankFailureInjector({fail_at: rank}))
+            injector=injector, rebalance=schedule is not None)
         print(f"elastic[{args.backend}] world={world} steps={n_steps} "
-              f"(rank {rank} dies at step {fail_at}, checkpoint every "
-              f"{args.elastic_ckpt_every})")
+              f"({what}, checkpoint every {args.elastic_ckpt_every})")
+        t0 = time.time()
         try:
             sup.run(params, n_steps, log_every=1)
         except ElasticError as e:
             print(f"elastic: {e}")
             return 2
+        wall = time.time() - t0
         for r in sup.reports:
-            print(f"elastic: recovered from rank {r.failed_rank} loss — "
-                  f"world {r.old_world}->{r.new_world} (shrunk "
-                  f"{r.shrunk_axis}), {r.steps_lost} steps lost, "
-                  f"recovery {r.recovery_seconds:.2f}s (compile "
-                  f"{r.compile_seconds:.2f}s, cache_hit={r.cache_hit})")
+            if r.shrunk_axis:
+                print(f"elastic: recovered from rank {r.failed_rank} "
+                      f"loss — world {r.old_world}->{r.new_world} "
+                      f"(shrunk {r.shrunk_axis}), {r.steps_lost} steps "
+                      f"lost, recovery {r.recovery_seconds:.2f}s "
+                      f"(compile {r.compile_seconds:.2f}s, "
+                      f"cache_hit={r.cache_hit})")
+            else:
+                print(f"elastic: numerical rewind at step "
+                      f"{r.step_failed} — {r.steps_lost} steps lost")
+        for g in sup.growths:
+            print(f"elastic: regrew world {g.old_world}->{g.new_world} "
+                  f"(grew {g.grown_axis}) at step {g.step}, "
+                  f"{g.steps_lost} steps lost")
+        for b in sup.rebalances:
+            print(f"elastic: rebalanced microbatches at step {b.step}: "
+                  f"{b.split}")
+        if schedule is not None:
+            report = sup.chaos_report(n_steps, wall_seconds=wall)
+            if args.chaos_report:
+                out = pathlib.Path(args.chaos_report)
+                out.parent.mkdir(parents=True, exist_ok=True)
+                out.write_text(report.to_json())
+                print(f"elastic: chaos report written to {out}")
+            print(f"elastic: chaos summary — "
+                  f"{len(report.recoveries)} recoveries, "
+                  f"{len(report.growths)} regrowths, "
+                  f"{len(report.rebalances)} rebalances, "
+                  f"{report.numeric_rewinds} NaN rewinds, "
+                  f"{report.corrupt_detected} corrupt checkpoints "
+                  f"skipped, {report.steps_lost_total} total steps "
+                  f"lost, final world {report.final_world}")
+            return 0
         if not sup.reports:
             print("elastic: no failure fired (check --elastic-fail-at)")
             return 2
@@ -174,6 +215,14 @@ def main(argv=None):
                     "steps, kill one rank mid-run, and recover by "
                     "recompiling the same strategy for the shrunk mesh "
                     "(docs/elasticity.md has a quickstart)")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="path to a FaultSchedule JSON document "
+                    "(docs/elasticity.md) scripting kills, arrivals, "
+                    "stragglers, checkpoint corruption and NaN spikes; "
+                    "implies --elastic (needs --strategy and --backend)")
+    ap.add_argument("--chaos-report", default=None, metavar="PATH",
+                    help="with --chaos: write the run's ChaosReport "
+                    "JSON here")
     ap.add_argument("--elastic-steps", type=int, default=8)
     ap.add_argument("--elastic-fail-at", type=int, default=None,
                     help="step at which the rank dies "
@@ -213,6 +262,16 @@ def main(argv=None):
     if args.backend and not args.strategy:
         print("--backend needs a --strategy document to execute")
         return 2
+    chaos_schedule = None
+    if args.chaos:
+        from repro.ft import ChaosScheduleError, FaultSchedule
+        try:
+            chaos_schedule = FaultSchedule.from_json(
+                pathlib.Path(args.chaos).read_text())
+        except (ChaosScheduleError, OSError) as e:
+            print(f"chaos: {e}")
+            return 2
+        args.elastic = True
     if args.elastic and not (args.strategy and args.backend):
         print("--elastic needs --strategy and --backend "
               "(reference or spmd)")
@@ -236,7 +295,14 @@ def main(argv=None):
                       "no device count to fake)")
                 return 2
             from repro.launch.hostdevices import ensure_host_devices
-            ensure_host_devices(strat.mesh.n_devices)
+            n_dev = strat.mesh.n_devices
+            if chaos_schedule is not None:
+                # arrivals name physical device indices beyond the
+                # original world — fake enough host devices for them
+                for ev in chaos_schedule.events:
+                    for d in ev.devices:
+                        n_dev = max(n_dev, int(d) + 1)
+            ensure_host_devices(n_dev)
         tokens = args.tune_tokens or tune.DEFAULT_TOKENS
         try:
             prog, sm = tune.build_strategy_program(base, strat, tokens)
@@ -283,7 +349,8 @@ def main(argv=None):
             params_real = tune.materialize_params(prog2.params)
             if args.elastic:
                 return run_elastic(prog2, params_real,
-                                   exec_cfg.vocab, args)
+                                   exec_cfg.vocab, args,
+                                   schedule=chaos_schedule)
             if args.backend == "spmd":
                 from repro.runtime.spmd import SpmdExecutor
                 ex = SpmdExecutor(prog2, params=params_real)

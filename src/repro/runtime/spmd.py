@@ -222,7 +222,12 @@ class SpmdExecutor:
         if physical_devices is not None:
             # elastic recovery: map the n logical plan ranks onto the
             # SURVIVING physical devices (by jax.devices() index), so a
-            # shrunk-world program never touches the failed chip
+            # shrunk-world program never touches the failed chip.  The
+            # same mapping RE-expands on regrowth: survivors keep their
+            # slots and replacement devices fill the new trailing ranks
+            # (any distinct index set works — the indices need not be
+            # contiguous or sorted, so a world regrown around a dead
+            # chip simply never names it)
             phys = [int(p) for p in physical_devices]
             if len(phys) != self.n:
                 raise SpmdBackendError(

@@ -97,3 +97,30 @@ def assert_grads_close(got, want, atol=1e-5):
             lambda a, b: np.testing.assert_allclose(a, b, atol=atol,
                                                     rtol=1e-4),
             got[bucket], want[bucket])
+
+
+def run_child_once_retry(child_src, arg, timeout=600, retries=1):
+    """Run a ``python -c`` child (PYTHONPATH=src:tests, JAX on CPU) and
+    return its stdout, retrying once on a non-zero exit: the faked-host
+    XLA device grids occasionally hit a flaky backend startup, and one
+    retry must not red-flag the suite.  A child that fails twice is a
+    real failure and raises with both transcripts."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": f"{root / 'src'}{os.pathsep}{root / 'tests'}"}
+    attempts = []
+    for _ in range(retries + 1):
+        proc = subprocess.run(
+            [sys.executable, "-c", child_src, arg],
+            capture_output=True, text=True, timeout=timeout, env=env)
+        if proc.returncode == 0:
+            return proc.stdout
+        attempts.append(proc)
+    raise AssertionError(
+        f"child failed on all {len(attempts)} attempt(s):\n" + "\n".join(
+            f"--- attempt {i + 1} (rc={p.returncode}) ---\n"
+            f"{p.stdout}\n{p.stderr}" for i, p in enumerate(attempts)))

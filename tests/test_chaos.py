@@ -1,0 +1,799 @@
+"""Chaos-schedule fault harness (ft/chaos.py + ft/regrow.py, DESIGN.md
+§14).
+
+Fast in-process tests: the FaultSchedule DSL (byte-stable JSON round
+trip, schema/kind/field rejection), ChaosInjector fire-once semantics,
+checkpoint corruption detection (manifest digest + per-leaf sha256),
+the growth planner's policy (mirror of the shrink planner), mb_split
+numerics-neutrality, and ElasticSupervisor's regrow / NaN-rewind /
+corrupt-skip / rebalance-with-hysteresis paths on the reference
+Interpreter with bit-exact parity.
+
+Soak subprocess (markers slow + chaos; CI job tier1-chaos): 8 faked
+host XLA devices run the real SPMD executor through one scripted
+kill -> regrow -> straggle -> rebalance -> corrupt -> NaN-spike
+sequence; every fault recovers, steps-lost stays bounded by the
+checkpoint interval per fault, and the final params match an
+equivalent uninterrupted piecewise reference bit for bit in fp64.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from helpers import (inputs_spec, make_mlp_forward, make_mlp_params,
+                     run_child_once_retry)
+
+from repro.checkpoint import (CheckpointManager, CorruptCheckpointError,
+                              load_manifest, reshard_tree)
+from repro.core.compiler import compile_training
+from repro.core.strategy import Mesh, Pipeline, Strategy, StrategyError, ZeRO
+from repro.data import SyntheticVectorSource, VectorLoader
+from repro.ft import (ChaosInjector, ChaosScheduleError, ElasticSupervisor,
+                      FaultEvent, FaultSchedule, NumericalFailure,
+                      RankFailure, RegrowthError, StragglerWatchdog,
+                      WorkerFailure, check_numerics, corrupt_latest,
+                      grow_for_arrivals, shrink_for_survivors, sgd_update,
+                      zero_shard_degree)
+from repro.runtime import Interpreter
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+S, D, BATCH = 4, 16, 8
+
+
+def _bits(x) -> bytes:
+    return np.asarray(x).tobytes()
+
+
+def _params_bits(tree) -> list:
+    return [_bits(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def _interp_factory(prog, params, devices):
+    return Interpreter(prog, params=params, track_memory=False)
+
+
+def _compile(sched="1f1b", zero=3, n_mb=2, mesh=None, mb_split=None,
+             batch=BATCH):
+    mesh = mesh or Mesh(pp=2, dp=2)
+    strat = Strategy(mesh, Pipeline(sched, n_mb=n_mb, mb_split=mb_split)
+                     | ZeRO(stage=zero)).validate()
+    params = make_mlp_params(jax.random.PRNGKey(0), S, d=D)
+    prog = compile_training(make_mlp_forward(S), params,
+                            inputs_spec(batch, D), strategy=strat)
+    return prog, params
+
+
+def _demo_schedule():
+    return FaultSchedule((
+        FaultEvent(step=6, kind="kill", rank=3),
+        FaultEvent(step=8, kind="arrive", devices=(3,)),
+        FaultEvent(step=10, kind="straggle", rank=2, factor=3.0,
+                   duration=12),
+        FaultEvent(step=18, kind="corrupt", flips=4),
+        FaultEvent(step=19, kind="nan_spike"),
+    ), seed=7)
+
+
+# ---------------------------------------------------------------------------
+# the DSL
+# ---------------------------------------------------------------------------
+
+class TestFaultScheduleDSL:
+    def test_json_round_trip_byte_stable(self):
+        sched = _demo_schedule()
+        doc = sched.to_json()
+        again = FaultSchedule.from_json(doc)
+        assert again == sched
+        assert again.to_json() == doc
+        # canonical encoding regardless of construction order
+        shuffled = FaultSchedule(tuple(reversed(sched.events)), seed=7)
+        assert shuffled.to_json() == doc
+
+    def test_events_sorted_by_step(self):
+        sched = _demo_schedule()
+        assert [e.step for e in sched.events] == \
+            sorted(e.step for e in sched.events)
+        assert [e.step for e in sched.events_at(8)] == [8]
+
+    def test_rejects_unknown_schema(self):
+        with pytest.raises(ChaosScheduleError, match="schema"):
+            FaultSchedule.from_json(
+                '{"schema": 99, "seed": 0, "events": []}')
+
+    def test_rejects_unknown_kind_and_field(self):
+        with pytest.raises(ChaosScheduleError, match="unknown kind"):
+            FaultSchedule.from_json(
+                '{"schema": 1, "seed": 0, '
+                '"events": [{"step": 1, "kind": "meteor"}]}')
+        with pytest.raises(ChaosScheduleError, match="unknown field"):
+            FaultSchedule.from_json(
+                '{"schema": 1, "seed": 0, '
+                '"events": [{"step": 1, "kind": "kill", "zap": 1}]}')
+
+    def test_rejects_malformed_events(self):
+        with pytest.raises(ChaosScheduleError, match="factor"):
+            FaultEvent(step=1, kind="straggle", rank=0,
+                       factor=0.5).validate()
+        with pytest.raises(ChaosScheduleError, match="rank"):
+            FaultEvent(step=1, kind="straggle", factor=2.0).validate()
+        with pytest.raises(ChaosScheduleError, match="device"):
+            FaultEvent(step=1, kind="arrive").validate()
+        with pytest.raises(ChaosScheduleError, match="flips"):
+            FaultEvent(step=1, kind="corrupt", flips=0).validate()
+
+    def test_random_is_seed_deterministic(self):
+        a = FaultSchedule.random(3, n_steps=20, world=8)
+        b = FaultSchedule.random(3, n_steps=20, world=8)
+        c = FaultSchedule.random(4, n_steps=20, world=8)
+        assert a.to_json() == b.to_json()
+        assert a.to_json() != c.to_json()
+
+
+class TestChaosInjector:
+    def test_kill_fires_once(self):
+        inj = ChaosInjector(_demo_schedule())
+        with pytest.raises(RankFailure) as ei:
+            inj.check(6)
+        assert ei.value.rank == 3 and ei.value.step == 6
+        inj.check(6)      # replay through the same step: no re-raise
+
+    def test_anonymous_kill(self):
+        inj = ChaosInjector(FaultSchedule(
+            (FaultEvent(step=2, kind="kill"),)))
+        with pytest.raises(WorkerFailure):
+            inj.check(2)
+
+    def test_arrivals_report_once(self):
+        inj = ChaosInjector(_demo_schedule())
+        assert inj.arrivals(8) == [3]
+        assert inj.arrivals(8) == []
+
+    def test_straggle_windows_stateless(self):
+        inj = ChaosInjector(_demo_schedule())
+        for _ in range(2):    # replay sees the same slowdown
+            assert inj.delay_factor(2, 10) == 3.0
+            assert inj.delay_factor(2, 21) == 3.0
+            assert inj.delay_factor(2, 22) == 1.0
+            assert inj.delay_factor(1, 10) == 1.0
+
+    def test_poison_and_corrupt_fire_once(self):
+        inj = ChaosInjector(_demo_schedule())
+        grads = {"w": np.ones(4)}
+        out, poisoned = inj.poison_grads(19, grads)
+        assert poisoned and np.isnan(np.asarray(out["w"])).all()
+        _, again = inj.poison_grads(19, grads)
+        assert not again
+        assert [e.flips for e in inj.corruptions(18)] == [4]
+        assert inj.corruptions(18) == []
+
+    def test_sentinel_trips_on_nan_and_inf(self):
+        check_numerics(0, 1.0, {"w": np.ones(3)})   # healthy: no raise
+        with pytest.raises(NumericalFailure, match="loss"):
+            check_numerics(1, float("nan"), {"w": np.ones(3)})
+        with pytest.raises(NumericalFailure, match="gradient"):
+            check_numerics(2, 1.0, {"w": np.array([1.0, np.inf])})
+
+    def test_sentinel_trips_on_bf16_nan(self):
+        # ml_dtypes customs register as numpy kind 'V', not 'f' — a
+        # dtype.kind filter silently waved bf16 NaN grads through the
+        # sentinel (found driving --chaos on a bf16 model end-to-end)
+        healthy = {"w": jnp.ones(3, dtype=jnp.bfloat16)}
+        check_numerics(0, 1.0, healthy)             # healthy: no raise
+        poisoned = {"w": healthy["w"] * float("nan")}
+        with pytest.raises(NumericalFailure, match="gradient"):
+            check_numerics(1, 1.0, poisoned)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption detection
+# ---------------------------------------------------------------------------
+
+class TestCheckpointIntegrity:
+    def _save_two(self, tmp_path):
+        ckpt = CheckpointManager(tmp_path, keep=10, async_save=False)
+        tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+                "b": np.ones(8, dtype=np.float32)}
+        ckpt.save(2, tree, extra={"data": {"step": 2}})
+        tree2 = {k: v + 1 for k, v in tree.items()}
+        ckpt.save(4, tree2, extra={"data": {"step": 4}})
+        return ckpt, tree, tree2
+
+    def test_corrupt_latest_detected_and_skippable(self, tmp_path):
+        ckpt, tree, _ = self._save_two(tmp_path)
+        assert ckpt.verify(2) and ckpt.verify(4)
+        step = corrupt_latest(ckpt, flips=4, seed=0)
+        assert step == 4
+        assert not ckpt.verify(4)
+        assert ckpt.verify(2)          # older checkpoint untouched
+        with pytest.raises(CorruptCheckpointError):
+            ckpt.restore(tree, step=4)
+        restored, extra = ckpt.restore(tree, step=2)
+        assert extra["step"] == 2
+        assert _params_bits(restored) == _params_bits(tree)
+
+    def test_manifest_tamper_detected(self, tmp_path):
+        ckpt, tree, _ = self._save_two(tmp_path)
+        d = ckpt.step_dir(4)
+        manifest = json.loads((d / "manifest.json").read_text())
+        # forge a leaf hash: per-leaf sha256 would now pass, so only the
+        # manifest content digest can catch it
+        name = sorted(manifest["leaves"])[0]
+        manifest["leaves"][name]["sha256"] = "0" * 64
+        (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        with pytest.raises(CorruptCheckpointError, match="digest"):
+            load_manifest(d)
+        assert not ckpt.verify(4)
+
+    def test_half_written_save_is_invisible(self, tmp_path):
+        ckpt, _, _ = self._save_two(tmp_path)
+        # a kill mid-save leaves only the .tmp staging dir — it must
+        # never be listed, restored from, or garbage-collect anything
+        tmp = ckpt.step_dir(6).with_suffix(".tmp")
+        tmp.mkdir()
+        (tmp / "leaf.npy").write_bytes(b"torn")
+        assert ckpt.steps() == [2, 4]
+        assert ckpt.latest_step() == 4
+
+    def test_digest_covers_leaf_table(self, tmp_path):
+        ckpt, _, _ = self._save_two(tmp_path)
+        manifest = load_manifest(ckpt.step_dir(4))
+        assert "digest" in manifest and len(manifest["digest"]) == 64
+
+
+# ---------------------------------------------------------------------------
+# growth planner
+# ---------------------------------------------------------------------------
+
+def _strategy(mesh, sched="1f1b", n_mb=4, zero=3, n_stages=None):
+    return Strategy(mesh, Pipeline(sched, n_mb=n_mb, n_stages=n_stages)
+                    | ZeRO(stage=zero)).validate()
+
+
+class TestGrowthPlanner:
+    def test_prefers_dp_growth(self):
+        plan = grow_for_arrivals(_strategy(Mesh(pp=2, dp=1)), 4)
+        assert plan.grown_axis == "dp"
+        assert plan.new_mesh.shape == (2, 2)
+
+    def test_largest_world_wins(self):
+        plan = grow_for_arrivals(_strategy(Mesh(pp=2, dp=2)), 8)
+        assert plan.new_mesh.n_devices == 8
+
+    def test_pp_growth_requires_stage_divisibility(self):
+        # 4 stages pinned (2 per rank under pp=2): pp can grow to 4
+        # (1 stage per rank) but never to 3
+        strat = _strategy(Mesh(pp=2, dp=1), n_stages=4)
+        plan = grow_for_arrivals(strat, 4)
+        # dp growth is preferred at equal world; growing dp to 4 fits
+        assert plan.new_mesh.n_devices == 4
+        assert plan.grown_axis == "dp"
+        # with dp maxed away, pp=3 (12 ranks would fit 3x4) is invalid:
+        # 4 stages % 3 != 0 — the only valid pp target is 4
+        strat_pp = Strategy(Mesh(pp=2), Pipeline("1f1b", n_mb=4,
+                                                 n_stages=4)).validate()
+        plan_pp = grow_for_arrivals(strat_pp, 5)
+        assert plan_pp.grown_axis == "pp"
+        assert plan_pp.new_mesh["pp"] == 4      # 3 was skipped
+
+    def test_shrink_then_grow_restores_original_mesh(self):
+        strat = _strategy(Mesh(pp=2, dp=2))
+        shrunk = shrink_for_survivors(strat, range(3))
+        regrown = grow_for_arrivals(shrunk.strategy, 4)
+        assert regrown.new_mesh.axis_names == strat.mesh.axis_names
+        assert regrown.new_mesh.shape == strat.mesh.shape
+        # and the regrown strategy drops any stale rebalance split
+        assert regrown.strategy.pipeline.mb_split is None
+
+    def test_errors(self):
+        with pytest.raises(RegrowthError, match="nothing to grow"):
+            grow_for_arrivals(_strategy(Mesh(pp=2, dp=2)), 4)
+        with pytest.raises(RegrowthError, match="no valid grown mesh"):
+            # the only growable axis is pp, and 3 pinned stages divide
+            # neither 4 nor 5 — every candidate fails for_mesh
+            grow_for_arrivals(
+                Strategy(Mesh(pp=3), Pipeline("1f1b", n_mb=4,
+                                              n_stages=3)).validate(), 5)
+
+
+# ---------------------------------------------------------------------------
+# mb_split: scheduling metadata, bit-identical numerics
+# ---------------------------------------------------------------------------
+
+class TestMbSplitNumerics:
+    def test_meta_recorded_and_bit_identical(self):
+        split = {0: 3, 1: 3, 2: 0, 3: 2}
+        prog_plain, params = _compile(n_mb=8, batch=16)
+        prog_split, _ = _compile(n_mb=8, mb_split=split, batch=16)
+        assert prog_plain.dag.meta.get("mb_split") is None
+        assert prog_split.dag.meta["mb_split"] == split
+        loader = VectorLoader(SyntheticVectorSource(D, seed=5),
+                              batch=16)
+        batch = loader.next_batch()
+        a = Interpreter(prog_plain, params=params,
+                        track_memory=False).run(batch)
+        b = Interpreter(prog_split, params=params,
+                        track_memory=False).run(batch)
+        assert _bits(np.float64(float(a.loss))) == \
+            _bits(np.float64(float(b.loss)))
+        assert _params_bits(a.grads) == _params_bits(b.grads)
+
+    def test_validate_rejects_bad_splits(self):
+        for bad in (((0, 4), (0, 4)), {0: 4, 9: 4}, {0: -1, 1: 9},
+                    {0: 2, 1: 2, 2: 2, 3: 1}):
+            with pytest.raises(StrategyError, match="mb_split"):
+                _compile(n_mb=8, mb_split=bad)
+
+    def test_for_mesh_drops_split(self):
+        strat = Strategy(Mesh(pp=2, dp=2),
+                         Pipeline("1f1b", n_mb=8,
+                                  mb_split={0: 2, 1: 2, 2: 2, 3: 2})
+                         | ZeRO(stage=3)).validate()
+        shrunk = shrink_for_survivors(strat, range(3))
+        assert shrunk.strategy.pipeline.mb_split is None
+
+
+# ---------------------------------------------------------------------------
+# supervisor chaos paths (fast, reference Interpreter)
+# ---------------------------------------------------------------------------
+
+class TestSupervisorChaos:
+    def _loader(self, seed=7):
+        return VectorLoader(SyntheticVectorSource(D, seed=seed),
+                            batch=BATCH)
+
+    def _sup(self, tmp_path, schedule, *, every=2, n_mb=2, **kw):
+        prog, params = _compile(n_mb=n_mb)
+        ckpt = CheckpointManager(tmp_path, keep=10, async_save=False)
+        sup = ElasticSupervisor(
+            prog, ckpt, self._loader(), runner_factory=_interp_factory,
+            checkpoint_every=every,
+            injector=ChaosInjector(schedule) if schedule else None, **kw)
+        return prog, params, sup, ckpt
+
+    def test_kill_then_regrow_restores_mesh_bitexact(self, tmp_path):
+        sched = FaultSchedule((
+            FaultEvent(step=3, kind="kill", rank=3),
+            FaultEvent(step=5, kind="arrive", devices=(3,)),
+        ))
+        prog, params, sup, ckpt = self._sup(tmp_path, sched)
+        final = sup.run(params, 10, log_every=0)
+
+        # shrink accounting
+        assert len(sup.reports) == 1
+        r = sup.reports[0]
+        assert r.resume_step == 2 and r.steps_lost == 1
+        assert r.old_world == 4 and r.new_world == 2
+        # regrowth restored the ORIGINAL mesh shape with zero lost steps
+        assert len(sup.growths) == 1
+        g = sup.growths[0]
+        assert g.step == 5 and g.steps_lost == 0
+        assert g.old_world == 2 and g.new_world == 4
+        assert sup.strategy.mesh.shape == prog.strategy.mesh.shape
+        assert sup.world == 4 and sorted(sup.physical) == [0, 1, 2, 3]
+        assert sup.standby == []
+
+        # piecewise parity: original 0..2, shrunk 2..5 (reshard down),
+        # regrown 5..10 (reshard up) — bit-exact in fp64
+        plan = shrink_for_survivors(prog.strategy, range(3))
+        gplan = grow_for_arrivals(plan.strategy, 4)
+        update = sgd_update()
+        loader = self._loader()
+        p = params
+        it = Interpreter(prog, params=p, track_memory=False)
+        ref = {}
+        for step in range(10):
+            if step == 2:
+                state, extra = ckpt.restore({"params": p}, step=2)
+                p = state["params"]
+                loader.load_state_dict(extra["data"])
+                p = reshard_tree(p, int(extra["zero_shards"]),
+                                 zero_shard_degree(plan.strategy))
+                it = Interpreter(prog.recompile(strategy=plan.strategy),
+                                 params=p, track_memory=False)
+            if step == 5:
+                p = reshard_tree(p, zero_shard_degree(plan.strategy),
+                                 zero_shard_degree(gplan.strategy))
+                it = Interpreter(prog.recompile(strategy=gplan.strategy),
+                                 params=p, track_memory=False)
+            res = it.run(loader.next_batch())
+            p = update(p, res.grads, step)
+            it.params = p
+            ref[step + 1] = float(res.loss)
+        got = {h["step"]: h["loss"] for h in sup.history}  # last wins
+        for step, want in ref.items():
+            assert _bits(np.float64(got[step])) == \
+                _bits(np.float64(want)), f"loss diverged at {step}"
+        assert _params_bits(final) == _params_bits(p)
+
+    def test_arrival_without_valid_mesh_banks_standby(self, tmp_path):
+        # a lone arrival on a full world cannot grow (no axis increase
+        # fits 5 ranks over pp2 x dp2) — it must be banked, not crash
+        sched = FaultSchedule((
+            FaultEvent(step=2, kind="arrive", devices=(4,)),))
+        _, params, sup, _ = self._sup(tmp_path, sched)
+        sup.run(params, 4, log_every=0)
+        assert sup.growths == []
+        assert sup.standby == [4]
+        assert sup.world == 4
+
+    def test_nan_spike_rewinds_and_matches_fault_free_run(self, tmp_path):
+        sched = FaultSchedule((FaultEvent(step=5, kind="nan_spike"),))
+        _, params, sup, _ = self._sup(tmp_path, sched)
+        final = sup.run(params, 8, log_every=0)
+        assert sup.numeric_rewinds == 1
+        assert len(sup.reports) == 1
+        r = sup.reports[0]
+        assert r.step_failed == 5 and r.resume_step == 4
+        assert r.steps_lost == 1        # bounded by the ckpt interval
+        assert r.old_world == r.new_world == 4   # rewind-only: no shrink
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree_util.tree_leaves(final))
+
+        # the poisoned update never touched the weights, so the final
+        # params are bit-identical to a run with no fault at all
+        prog2, params2 = _compile()
+        loader2 = self._loader()
+        update = sgd_update()
+        it = Interpreter(prog2, params=params2, track_memory=False)
+        p = params2
+        for step in range(8):
+            res = it.run(loader2.next_batch())
+            p = update(p, res.grads, step)
+            it.params = p
+        assert _params_bits(final) == _params_bits(p)
+
+    def test_corrupt_checkpoint_skipped_on_recovery(self, tmp_path):
+        sched = FaultSchedule((
+            FaultEvent(step=4, kind="corrupt", flips=6),
+            FaultEvent(step=5, kind="kill", rank=3),
+        ))
+        _, params, sup, ckpt = self._sup(tmp_path, sched)
+        sup.run(params, 8, log_every=0)
+        # the corrupted step-4 checkpoint was detected and skipped; the
+        # recovery restored step 2 instead
+        assert sup.corrupt_detected == 1
+        assert sup.corrupt_skipped_steps == [4]
+        assert sup.reports[0].resume_step == 2
+        assert sup.reports[0].steps_lost == 3   # <= 2 intervals: 2 faults
+        # the replay re-saved a GOOD checkpoint over the corrupt one
+        # (the corrupt event fired once and does not replay)
+        assert ckpt.verify(4)
+
+    def test_all_checkpoints_corrupt_falls_back_to_pristine(
+            self, tmp_path):
+        sched = FaultSchedule((
+            FaultEvent(step=3, kind="corrupt", flips=6),
+            FaultEvent(step=4, kind="kill", rank=3),
+        ))
+        prog, params, sup, ckpt = self._sup(tmp_path, sched, every=3)
+        sup.run(params, 6, log_every=0)
+        # only checkpoint (step 3) was corrupt -> from-scratch restart
+        assert sup.corrupt_detected == 1
+        assert sup.reports[0].resume_step == 0
+        assert sup.reports[0].steps_lost == 4
+
+    def test_chaos_report_accounting(self, tmp_path):
+        sched = FaultSchedule((
+            FaultEvent(step=3, kind="kill", rank=3),
+            FaultEvent(step=5, kind="arrive", devices=(3,)),
+        ), seed=11)
+        _, params, sup, _ = self._sup(tmp_path, sched)
+        sup.run(params, 10, log_every=0)
+        rep = sup.chaos_report(10, wall_seconds=1.0)
+        assert rep.schedule_seed == 11 and rep.n_events == 2
+        assert rep.kinds == {"kill": 1, "arrive": 1}
+        assert len(rep.recoveries) == 1 and len(rep.growths) == 1
+        assert rep.steps_lost_total == 1
+        assert rep.final_world == 4
+        doc = json.loads(rep.to_json())
+        assert doc["growths"][0]["new_world"] == 4
+
+
+class TestRebalanceRecompile:
+    def _run(self, tmp_path, schedule, *, rebalance=True, seed=7,
+             n_steps=12, n_mb=8, **kw):
+        prog, params = _compile(n_mb=n_mb, batch=16)
+        loader = VectorLoader(SyntheticVectorSource(D, seed=seed),
+                              batch=16)
+        ckpt = CheckpointManager(tmp_path, keep=10, async_save=False)
+        sup = ElasticSupervisor(
+            prog, ckpt, loader, runner_factory=_interp_factory,
+            checkpoint_every=2,
+            injector=ChaosInjector(schedule) if schedule else None,
+            rebalance=rebalance, **kw)
+        final = sup.run(params, n_steps, log_every=0)
+        return sup, final
+
+    def test_persistent_straggler_triggers_one_rebalance(self, tmp_path):
+        # rank 2 runs exactly 4x slow from step 0: every per-rank EMA is
+        # the SAME weighted sum scaled by the factor, so slowdowns() is
+        # exactly {.., 2: 4.0, ..} at every boundary -> the proposal is
+        # identical each time and hysteresis fires after `patience`
+        sched = FaultSchedule((
+            FaultEvent(step=0, kind="straggle", rank=2, factor=4.0,
+                       duration=100),))
+        sup, _ = self._run(tmp_path, sched, rebalance_patience=2,
+                           rebalance_cooldown=2)
+        assert len(sup.rebalances) == 1
+        rb = sup.rebalances[0]
+        # boundaries at 2 (streak 1) and 4 (streak 2 -> act)
+        assert rb.step == 4
+        assert sum(rb.split.values()) == 8
+        assert rb.split[2] == min(rb.split.values())
+        assert sup.strategy.pipeline.mb_split_dict() == rb.split
+        # once applied, the unchanged proposal never re-fires, and the
+        # rebalanced strategy advertises itself in its label
+        assert "/rb" in sup.strategy.label()
+
+    def test_rebalance_is_numerics_neutral(self, tmp_path):
+        sched = FaultSchedule((
+            FaultEvent(step=0, kind="straggle", rank=2, factor=4.0,
+                       duration=100),))
+        sup, final = self._run(tmp_path, sched, rebalance_patience=2,
+                               rebalance_cooldown=2)
+        assert sup.rebalances        # the recompile really happened
+        sup2, final2 = self._run(tmp_path / "ref", None, rebalance=False)
+        got = {h["step"]: h["loss"] for h in sup.history}
+        want = {h["step"]: h["loss"] for h in sup2.history}
+        assert got.keys() == want.keys()
+        for step in want:
+            assert _bits(np.float64(got[step])) == \
+                _bits(np.float64(want[step])), step
+        assert _params_bits(final) == _params_bits(final2)
+
+    def test_oscillating_emas_never_thrash(self, tmp_path):
+        class Oscillating(StragglerWatchdog):
+            def __init__(self):
+                super().__init__()
+                self.calls = 0
+
+            def slowdowns(self):
+                self.calls += 1
+                return ({0: 3.0, 1: 1.0, 2: 1.0, 3: 1.0}
+                        if self.calls % 2 else
+                        {0: 1.0, 1: 1.0, 2: 3.0, 3: 1.0})
+
+        wd = Oscillating()
+        sup, _ = self._run(tmp_path, None, watchdog=wd,
+                           rebalance_patience=2, rebalance_cooldown=2)
+        assert wd.calls >= 4            # proposals were consulted
+        assert sup.rebalances == []     # but never acted on
+
+    def test_cooldown_blocks_repeat_recompiles(self, tmp_path):
+        class Shifting(StragglerWatchdog):
+            """A different persistent straggler after every boundary —
+            without a cooldown this would recompile at every one."""
+            def __init__(self):
+                super().__init__()
+                self.calls = 0
+
+            def slowdowns(self):
+                self.calls += 1
+                slow = (self.calls // 3) % 4
+                d = {r: 1.0 for r in range(4)}
+                d[slow] = 4.0
+                return d
+
+        sup, _ = self._run(tmp_path, None, watchdog=Shifting(),
+                           rebalance_patience=1,
+                           rebalance_cooldown=100, n_steps=12)
+        assert len(sup.rebalances) == 1
+
+    def test_uniform_fleet_never_rebalances(self, tmp_path):
+        sup, _ = self._run(tmp_path, None, rebalance_patience=1,
+                           rebalance_cooldown=0)
+        assert sup.rebalances == []
+        assert sup.strategy.pipeline.mb_split is None
+
+    def test_canonical_split_is_on_pace_when_nmb_lt_world(self,
+                                                          tmp_path):
+        # n_mb=2 over 4 ranks: the canonical healthy split {1,1,0,0}
+        # has unequal counts — a healthy fleet must still never
+        # rebalance (regression: "all counts equal" is the wrong
+        # uniformity test)
+        class Healthy(StragglerWatchdog):
+            def slowdowns(self):
+                return {r: 1.0 for r in range(4)}
+
+        sup, _ = self._run(tmp_path, None, watchdog=Healthy(), n_mb=2,
+                           rebalance_patience=1, rebalance_cooldown=0)
+        assert sup.rebalances == []
+        assert sup.strategy.pipeline.mb_split is None
+
+    def test_recovered_fleet_reverts_split(self, tmp_path):
+        # skewed for two boundaries (apply a split), then back on pace:
+        # the supervisor must recompile the default schedule back in —
+        # under the same hysteresis, so one noisy boundary cannot flap
+        class Recovering(StragglerWatchdog):
+            def __init__(self):
+                super().__init__()
+                self.calls = 0
+
+            def slowdowns(self):
+                self.calls += 1
+                if self.calls <= 2:
+                    return {0: 1.0, 1: 1.0, 2: 4.0, 3: 1.0}
+                return {r: 1.0 for r in range(4)}
+
+        sup, _ = self._run(tmp_path, None, watchdog=Recovering(),
+                           rebalance_patience=2, rebalance_cooldown=2)
+        assert len(sup.rebalances) == 2
+        apply, revert = sup.rebalances
+        assert apply.step == 4 and sum(apply.split.values()) == 8
+        assert revert.step == 8 and revert.split == {}
+        assert sup.strategy.pipeline.mb_split is None
+        assert "/rb" not in sup.strategy.label()
+
+
+# ---------------------------------------------------------------------------
+# the soak: scripted kill -> regrow -> straggle -> rebalance -> corrupt
+# -> NaN on 8 faked XLA devices (markers slow + chaos; CI tier1-chaos)
+# ---------------------------------------------------------------------------
+
+CHILD_SOAK = r"""
+import json, os, pathlib, sys, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+
+from helpers import inputs_spec, make_mlp_forward, make_mlp_params
+from repro.checkpoint import CheckpointManager, reshard_tree
+from repro.core.compiler import compile_training
+from repro.core.strategy import Mesh, Pipeline, Strategy, ZeRO
+from repro.data import SyntheticVectorSource, VectorLoader
+from repro.ft import (ChaosInjector, ElasticSupervisor, FaultEvent,
+                      FaultSchedule, grow_for_arrivals,
+                      shrink_for_survivors, sgd_update,
+                      zero_shard_degree)
+from repro.runtime.spmd import SpmdExecutor
+
+S, D, BATCH = 8, 16, 16
+N_STEPS, CKPT = 24, 4
+
+def bits(x):
+    return np.asarray(x).tobytes()
+
+def params_bits(tree):
+    return [bits(l) for l in jax.tree_util.tree_leaves(tree)]
+
+def spmd_factory(prog, params, devices):
+    return SpmdExecutor(prog, params=params, physical_devices=devices)
+
+schedule = FaultSchedule((
+    FaultEvent(step=6, kind="kill", rank=3),
+    FaultEvent(step=8, kind="arrive", devices=(3,)),
+    # from step 8 (the regrowth boundary, where rank EMAs reset) rank 2
+    # runs exactly 3x slow: slowdowns() is exactly 3.0 every boundary,
+    # so the rebalance proposal is stable and hysteresis fires at the
+    # second boundary (step 16)
+    FaultEvent(step=8, kind="straggle", rank=2, factor=3.0, duration=16),
+    FaultEvent(step=16, kind="corrupt", flips=8),
+    FaultEvent(step=19, kind="nan_spike"),
+), seed=23)
+doc = schedule.to_json()
+assert FaultSchedule.from_json(doc).to_json() == doc
+
+mesh = Mesh(pp=4, dp=2)
+strat = Strategy(mesh, Pipeline("1f1b", n_mb=4)
+                 | ZeRO(stage=3)).validate()
+params = make_mlp_params(jax.random.PRNGKey(0), S, d=D)
+prog = compile_training(make_mlp_forward(S), params,
+                        inputs_spec(BATCH, D), strategy=strat)
+
+with tempfile.TemporaryDirectory() as td:
+    loader = VectorLoader(SyntheticVectorSource(D, seed=11), batch=BATCH)
+    ckpt = CheckpointManager(pathlib.Path(td), keep=10, async_save=False)
+    sup = ElasticSupervisor(
+        prog, ckpt, loader, runner_factory=spmd_factory,
+        checkpoint_every=CKPT, injector=ChaosInjector(schedule),
+        rebalance=True, rebalance_patience=2, rebalance_cooldown=CKPT)
+    final = sup.run(params, N_STEPS, log_every=0)
+
+    # --- every fault recovered, with bounded steps-lost ---------------
+    # kill at 6 -> shrink dp, resume at checkpoint 4
+    shrinks = [r for r in sup.reports if r.shrunk_axis]
+    assert len(shrinks) == 1, sup.reports
+    k = shrinks[0]
+    assert k.step_failed == 6 and k.resume_step == 4
+    assert 0 < k.steps_lost <= CKPT
+    assert k.old_world == 8 and k.new_world == 4
+    assert k.failed_rank == 3 and k.shrunk_axis == "dp"
+
+    # arrival at 8 -> regrowth restores the ORIGINAL mesh, 0 lost steps
+    assert len(sup.growths) == 1, sup.growths
+    g = sup.growths[0]
+    assert g.step == 8 and g.steps_lost == 0
+    assert g.old_world == 4 and g.new_world == 8
+    assert g.grown_axis == "dp"
+    assert sup.strategy.mesh.shape == mesh.shape
+    assert sup.strategy.mesh.axis_names == mesh.axis_names
+    assert 3 not in sup.physical[:4]     # dead chip replaced, not reused
+    assert sorted(sup.physical) == list(range(8))
+
+    # straggler detected -> exactly one rebalance recompile at step 16
+    assert len(sup.rebalances) == 1, sup.rebalances
+    rb = sup.rebalances[0]
+    assert rb.step == 16
+    assert sum(rb.split.values()) == 4
+    assert rb.split[2] == min(rb.split.values())
+    assert abs(rb.slowdowns[2] - 3.0) < 1e-6, rb.slowdowns
+
+    # corrupt checkpoint detected and skipped; NaN spike rewound to the
+    # newest GOOD checkpoint (12, not the corrupted 16)
+    assert sup.corrupt_detected == 1
+    assert sup.corrupt_skipped_steps == [16]
+    rewinds = [r for r in sup.reports if not r.shrunk_axis]
+    assert len(rewinds) == 1 and sup.numeric_rewinds == 1
+    n = rewinds[0]
+    assert n.step_failed == 19 and n.resume_step == 12
+    # two stacked faults (corrupt + nan) cost at most two intervals
+    assert n.steps_lost <= 2 * CKPT
+
+    # --- fp64 bit-parity vs the equivalent uninterrupted reference ----
+    # original program 0..4, shrunk program 4..8 from the shared
+    # checkpoint (ZeRO reshard down), regrown(=original-shape) program
+    # 8..24 (ZeRO reshard up).  Straggle windows, the mb_split
+    # recompile and the NaN rewind replay are all numerics-neutral, so
+    # this covers the whole soak.
+    plan = shrink_for_survivors(strat, [r for r in range(8) if r != 3])
+    gplan = grow_for_arrivals(plan.strategy, 8)
+    update = sgd_update()
+    rl = VectorLoader(SyntheticVectorSource(D, seed=11), batch=BATCH)
+    p = params
+    ex = SpmdExecutor(prog, params=p)
+    ref = {}
+    for step in range(N_STEPS):
+        if step == 4:
+            state, extra = ckpt.restore({"params": p}, step=4)
+            p = state["params"]
+            rl.load_state_dict(extra["data"])
+            p = reshard_tree(p, int(extra["zero_shards"]),
+                             zero_shard_degree(plan.strategy))
+            ex = SpmdExecutor(prog.recompile(strategy=plan.strategy),
+                              params=p)
+        if step == 8:
+            p = reshard_tree(p, zero_shard_degree(plan.strategy),
+                             zero_shard_degree(gplan.strategy))
+            ex = SpmdExecutor(prog.recompile(strategy=gplan.strategy),
+                              params=p)
+        res = ex.run(rl.next_batch())
+        p = update(p, res.grads, step)
+        ex.params = p
+        ref[step + 1] = float(res.loss)
+
+    got = {h["step"]: h["loss"] for h in sup.history}   # last wins
+    for step, want in ref.items():
+        assert bits(np.float64(got[step])) == bits(np.float64(want)), \
+            (step, got[step], want)
+    assert params_bits(final) == params_bits(p)
+
+    # ChaosReport serializes the whole story
+    rep = sup.chaos_report(N_STEPS)
+    out = json.loads(rep.to_json())
+    assert out["kinds"] == {"kill": 1, "arrive": 1, "straggle": 1,
+                            "corrupt": 1, "nan_spike": 1}
+    assert out["final_world"] == 8
+    assert out["steps_lost_total"] == k.steps_lost + n.steps_lost
+
+print("SOAK_OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+class TestChaosSoak:
+    """One scripted kill -> regrow -> straggle -> rebalance -> corrupt
+    -> NaN sequence end to end on 8 faked XLA devices (subprocess: the
+    device-count flag must be set before jax initializes)."""
+
+    def test_soak_sequence(self):
+        out = run_child_once_retry(CHILD_SOAK, "{}", timeout=600)
+        assert "SOAK_OK" in out, out

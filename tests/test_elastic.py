@@ -445,15 +445,9 @@ class TestKillARankSpmd:
     into other tests)."""
 
     def _run_child(self, cases):
-        env = {**os.environ, "JAX_PLATFORMS": "cpu",
-               "PYTHONPATH":
-                   f"{_ROOT / 'src'}{os.pathsep}{_ROOT / 'tests'}"}
-        proc = subprocess.run(
-            [sys.executable, "-c", CHILD, json.dumps(cases)],
-            capture_output=True, text=True, timeout=600, env=env)
-        assert proc.returncode == 0, \
-            f"child failed:\n{proc.stdout}\n{proc.stderr}"
-        return proc.stdout
+        from helpers import run_child_once_retry
+        return run_child_once_retry(CHILD, json.dumps(cases),
+                                    timeout=600)
 
     def test_kill_a_rank_grid(self):
         cases = [[sched, zero] for sched in ("1f1b", "gpipe")

@@ -8,7 +8,11 @@
   dependencies for random (kind, R, M);
 - elastic recovery: any surviving-rank subset that admits a shrunk mesh
   yields a plan that passes validate_comm_order; the ZeRO checkpoint
-  shard remap round-trips bit-exactly across random degree changes.
+  shard remap round-trips bit-exactly across random degree changes;
+- chaos/rebalance (PR 7): rebalance_microbatches conserves the
+  microbatch count, respects the uniform guard, and is a no-op for a
+  uniform fleet; a shrink-then-regrow ZeRO reshard chain is bit-exact;
+  FaultSchedule JSON round-trips any random schedule byte-stably.
 """
 import jax
 import jax.numpy as jnp
@@ -211,3 +215,99 @@ class TestElasticProperties:
         lb = jax.tree_util.tree_leaves(out)
         assert all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
                    for a, b in zip(la, lb))
+
+    @given(shape=st.sampled_from([(5,), (16,), (3, 7), (2, 3, 4)]),
+           dtype=st.sampled_from(["float32", "float64", "int32"]),
+           down=st.integers(1, 8),
+           up=st.integers(1, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_shrink_then_grow_reshard_roundtrips(self, shape, dtype,
+                                                 down, up):
+        """The PR 7 regrowth contract: mapping a checkpoint DOWN in ZeRO
+        degree at shrink time and back UP at regrowth time (through any
+        intermediate degree) reproduces every leaf bit for bit."""
+        from repro.checkpoint import reshard_tree
+        rng = np.random.default_rng(hash((shape, dtype, down, up))
+                                    & 0xFFFF)
+        if np.issubdtype(np.dtype(dtype), np.integer):
+            leaf = rng.integers(-50, 50, size=shape).astype(dtype)
+        else:
+            leaf = rng.standard_normal(shape).astype(dtype)
+        tree = {"stage0": {"w": leaf, "b": leaf.ravel()[:1]}}
+        out = reshard_tree(reshard_tree(tree, up, down), down, up)
+        la = jax.tree_util.tree_leaves(tree)
+        lb = jax.tree_util.tree_leaves(out)
+        assert all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                   for a, b in zip(la, lb))
+
+
+class TestRebalanceProperties:
+    """Invariants of tune.rebalance.rebalance_microbatches — the
+    proposal the chaos supervisor consumes as a mid-run recompile."""
+
+    @staticmethod
+    def _slowdowns(data, n_ranks, spread):
+        return {r: data.draw(st.floats(1.0, spread))
+                for r in range(n_ranks)}
+
+    @given(n_mb=st.integers(0, 32),
+           n_ranks=st.integers(1, 8),
+           data=st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_microbatch_count_conserved(self, n_mb, n_ranks, data):
+        """The split re-assigns microbatches, it never changes their
+        number — the invariant Pipeline.validate also enforces."""
+        from repro.tune.rebalance import rebalance_microbatches
+        slow = self._slowdowns(data, n_ranks, 8.0)
+        split = rebalance_microbatches(n_mb, slow)
+        assert sum(split.values()) == n_mb
+        assert set(split) == set(slow)
+        assert all(c >= 0 for c in split.values())
+
+    @given(n_mb=st.integers(1, 32),
+           n_ranks=st.integers(1, 8),
+           data=st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_uniform_guard(self, n_mb, n_ranks, data):
+        """Fleets whose spread stays within the guard threshold get an
+        exactly uniform split — EMA noise must never skew assignment."""
+        from repro.tune.rebalance import rebalance_microbatches
+        slow = self._slowdowns(data, n_ranks, 1.25)
+        split = rebalance_microbatches(n_mb, slow, threshold=1.25)
+        assert max(split.values()) - min(split.values()) <= \
+            (0 if n_mb % n_ranks == 0 else 1)
+
+    @given(n_mb=st.integers(1, 32), n_ranks=st.integers(1, 8),
+           pace=st.floats(0.5, 4.0))
+    @settings(max_examples=40, deadline=None)
+    def test_idempotent_on_uniform_fleet(self, n_mb, n_ranks, pace):
+        """All ranks at the same pace (whatever it is) always yields the
+        same canonical uniform split — so consuming a proposal on a
+        healthy fleet is a fixed point, never a recompile loop."""
+        from repro.tune.rebalance import rebalance_microbatches
+        slow = {r: pace for r in range(n_ranks)}
+        a = rebalance_microbatches(n_mb, slow)
+        b = rebalance_microbatches(n_mb, slow)
+        assert a == b
+        assert max(a.values()) - min(a.values()) <= \
+            (0 if n_mb % n_ranks == 0 else 1)
+
+
+class TestFaultScheduleProperties:
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_steps=st.integers(2, 50),
+           world=st.integers(1, 16),
+           n_events=st.integers(1, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_random_schedule_roundtrips_byte_stable(self, seed, n_steps,
+                                                    world, n_events):
+        """Any random FaultSchedule serializes to canonical JSON that
+        parses back to an equal schedule and re-serializes to the SAME
+        bytes — the Strategy-document contract, for faults."""
+        from repro.ft import FaultSchedule
+        sched = FaultSchedule.random(seed, n_steps=n_steps, world=world,
+                                     n_events=n_events)
+        doc = sched.to_json()
+        again = FaultSchedule.from_json(doc)
+        assert again == sched
+        assert again.to_json() == doc
