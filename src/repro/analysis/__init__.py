@@ -1,0 +1,24 @@
+"""Static plan verifier (DESIGN.md §15).
+
+A pass-based analysis layer over the compiled IR: abstractly executes
+each rank's ``DevicePlan`` without touching XLA and reports deadlocks,
+buffer-lifetime bugs, stream races and interface mismatches as
+``Diagnostic`` records with stable ``PIPER`` codes and provenance
+(which directive/fragment introduced the offending node).
+
+Entry points:
+
+  ``analyze(prog, depth="quick"|"deep")`` — run the pass pipeline on a
+      ``CompiledProgram`` and return an ``AnalysisReport``;
+  ``python -m repro.launch.lint`` — CLI surface (single strategy or the
+      config × schedule grid), JSON/text output;
+  ``compile_training(..., analyze=...)`` — the always-on quick subset.
+"""
+from .diagnostics import (CODES, AnalysisReport, Diagnostic,
+                          PlanVerificationError, node_provenance)
+from .verifier import analyze
+
+__all__ = [
+    "CODES", "AnalysisReport", "Diagnostic", "PlanVerificationError",
+    "analyze", "node_provenance",
+]

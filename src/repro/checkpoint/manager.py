@@ -25,7 +25,7 @@ import pathlib
 import shutil
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

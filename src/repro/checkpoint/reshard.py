@@ -16,7 +16,7 @@ count), so padding cannot leak across a degree change.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -129,7 +129,8 @@ def build_backward(dag: TrainingDAG, split_backward: bool = False) -> None:
                 n_outputs=1 + m,
                 out_specs=[grad_spec] + [feed_spec(j) for j in range(m)],
                 meta={"fwd_node": nid, "n_inputs": m + k, "n_cots": k,
-                      "is_backward": True},
+                      "is_backward": True,
+                      "origin": f"autodiff({pass_tag} of {fwd.name!r})"},
             )
             # residual edges: forward inputs flow to the backward chunk too
             for j in range(m):

@@ -24,6 +24,23 @@ from .strategy import RawDirectives, Strategy
 from .trace import Recorder
 
 
+def _directive_label(d: Directive) -> str:
+    """Provenance label for a directive: the source-fragment label that
+    ``Strategy.lower`` attached, else a short structural description
+    (hand-assembled ``RawDirectives`` lists carry no fragment)."""
+    label = getattr(d, "origin", None)
+    if label:
+        return label
+    name = type(d).__name__
+    devs = getattr(d, "devices", None)
+    if devs is not None:
+        ds = list(devs)
+        dtxt = (f"devices={ds}" if len(ds) <= 4
+                else f"devices=[{ds[0]}..{ds[-1]}]x{len(ds)}")
+        return f"{name}({dtxt})"
+    return name
+
+
 @dataclass
 class CompiledProgram:
     dag: TrainingDAG
@@ -84,6 +101,7 @@ def compile_training(
     split_backward: bool = False,
     overlap=None,
     strategy: Optional[Strategy] = None,
+    analyze: str = "quick",
 ) -> CompiledProgram:
     """``forward(rec, tvs)`` builds the model using ``rec.annotate`` /
     ``rec.region`` and returns the loss TracedValue.  ``inputs`` maps
@@ -102,7 +120,15 @@ def compile_training(
     The strategy's ``Remat`` fragment rewrites the backward chunks'
     residual policy (``passes.apply_remat``) right after autodiff; the
     ``Offload`` fragment splices host round-trip nodes in the
-    finalization passes (``passes.apply_offload``)."""
+    finalization passes (``passes.apply_offload``).
+
+    ``analyze`` selects the static-verifier depth run on the finished
+    plan (``repro.analysis``): ``"quick"`` (default) runs the cheap
+    graph passes — interface consistency, comm ordering, stream races;
+    ``"deep"`` additionally replays the whole plan through the abstract
+    executor (deadlock + buffer-lifetime analysis); ``"off"`` skips
+    verification.  Error-severity diagnostics raise
+    ``PlanVerificationError`` (a ``ScheduleRejected``)."""
     if strategy is not None:
         if schedule or split_backward or overlap is not None:
             raise ValueError(
@@ -137,7 +163,11 @@ def compile_training(
 
     directives = strategy.lower(dag=dag)
     for directive in directives:
-        directive.apply(dag)
+        # provenance: nodes/temporal edges a directive introduces carry
+        # the emitting fragment's label (Strategy.lower attaches one) so
+        # static-analysis diagnostics can name the culprit directive
+        with dag.origin(_directive_label(directive)):
+            directive.apply(dag)
 
     pipe = strategy.pipeline
     if pipe is not None and pipe.mb_split is not None:
@@ -158,4 +188,13 @@ def compile_training(
                   "fused_gathers": dag.meta.get("fused_gathers", 0),
                   "fused_reduce_scatters":
                       dag.meta.get("fused_reduce_scatters", 0)}
+    if analyze != "off":
+        # function-local import: core stays importable on its own and
+        # the analysis package imports core freely
+        from ..analysis import analyze as analyze_plan
+        report = analyze_plan(prog, depth=analyze)
+        prog.stats["analysis"] = {"depth": analyze,
+                                  "diagnostics": len(report.diagnostics),
+                                  "codes": sorted(set(report.codes()))}
+        report.raise_if_errors()
     return prog

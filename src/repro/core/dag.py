@@ -12,12 +12,12 @@ DESIGN.md section 2.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Optional
 
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # Value specs
@@ -187,11 +187,34 @@ class TrainingDAG:
         # bucket name -> [(node, out_slot)] values holding final grads
         self.grad_sinks: dict[str, list[tuple[int, int]]] = {}
         self.meta: dict[str, Any] = {}
+        # provenance: when set (via the ``origin`` context manager) every
+        # node created inside the context records which directive /
+        # fragment / pass introduced it in ``Node.meta["origin"]``, and
+        # every temporal edge records it in ``temporal_origin``.  The
+        # static verifier (``repro.analysis``) reads these so a
+        # diagnostic names ``Overlap(bucket_mb=32)`` instead of a bare
+        # node id.
+        self._origin: Optional[str] = None
+        self.temporal_origin: dict[tuple[int, int], str] = {}
 
     # -- construction -------------------------------------------------------
+    @contextlib.contextmanager
+    def origin(self, label: Optional[str]):
+        """Attribute every node/temporal edge created in this context to
+        ``label`` (nested contexts keep the innermost label; a node whose
+        meta already carries an origin — e.g. a Split clone copying its
+        template's meta — keeps the inherited one)."""
+        prev, self._origin = self._origin, (label or self._origin)
+        try:
+            yield
+        finally:
+            self._origin = prev
+
     def new_node(self, **kw) -> Node:
         nid = next(self._next_id)
         node = Node(id=nid, **kw)
+        if self._origin is not None:
+            node.meta.setdefault("origin", self._origin)
         self.nodes[nid] = node
         return node
 
@@ -204,6 +227,8 @@ class TrainingDAG:
     def add_temporal(self, src: int, dst: int) -> None:
         if src != dst:
             self.temporal.add((src, dst))
+            if self._origin is not None:
+                self.temporal_origin.setdefault((src, dst), self._origin)
 
     def bucket_of(self, name: str) -> Bucket:
         if name not in self.buckets:
@@ -302,6 +327,8 @@ class TrainingDAG:
         self.edges = [e for e in self.edges if e.src != nid and e.dst != nid]
         self.temporal = {(u, v) for (u, v) in self.temporal
                          if u != nid and v != nid}
+        self.temporal_origin = {k: o for k, o in self.temporal_origin.items()
+                                if k in self.temporal}
 
     # -- validation ----------------------------------------------------------
     def validate(self) -> None:

@@ -18,8 +18,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence, Union
 
-from .dag import (PASS_B, PASS_BW, PASS_F, Edge, Node, TrainingDAG,
-                  ValueSpec)
+from .dag import PASS_B, PASS_BW, Edge, Node, TrainingDAG, ValueSpec
 from .filters import (F, as_filter, no_match_report, select_union,
                       sinks_within, sources_within)
 

@@ -96,15 +96,20 @@ def apply_overlap(dag: TrainingDAG, cfg: OverlapConfig) -> dict:
     the rewrite statistics."""
     stats = {"fused_gathers": 0, "fused_reduce_scatters": 0,
              "prefetch_edges": 0}
+    k = max(1, int(cfg.prefetch)) if cfg.enabled else 1
+    label = (f"Overlap(prefetch={k}, "
+             f"bucket_mb={cfg.bucket_bytes >> 20})" if cfg.enabled
+             else "Overlap(enabled=False)")
     if cfg.enabled and cfg.bucket_bytes > 0:
-        stats.update(bucket_zero_collectives(dag, cfg.bucket_bytes))
+        with dag.origin(label):
+            stats.update(bucket_zero_collectives(dag, cfg.bucket_bytes))
     else:
         dag.meta.setdefault("fused_gathers", 0)
         dag.meta.setdefault("fused_reduce_scatters", 0)
     if cfg.enabled:
         assign_overlap_streams(dag, cfg.gather_stream, cfg.reduce_stream)
-    k = max(1, int(cfg.prefetch)) if cfg.enabled else 1
-    stats["prefetch_edges"] = prefetch_gathers(dag, k)
+    with dag.origin(label):
+        stats["prefetch_edges"] = prefetch_gathers(dag, k)
     dag.meta["gather_limit"] = k
     dag.meta["bubble_aware"] = bool(cfg.enabled and cfg.bubble_aware)
     dag.meta["overlap"] = {"enabled": cfg.enabled, "prefetch": k,

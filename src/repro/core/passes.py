@@ -27,7 +27,7 @@ runs as the tail of this pass layer, after the dedup passes above.
 """
 from __future__ import annotations
 
-from .dag import PASS_B, TrainingDAG, ValueSpec
+from .dag import TrainingDAG, ValueSpec
 
 DEFAULT_STREAM = "main"
 
@@ -322,7 +322,8 @@ def insert_p2p(dag: TrainingDAG) -> None:
             kind="comm", op="p2p", name=f"p2p:{src.name}->{dst.name}",
             dims=dict(dst.dims), devices=tuple(sd) + tuple(dd),
             stream=stream, payload="act", out_specs=[e.spec],
-            meta={"pairs": pairs})
+            meta={"pairs": pairs,
+                  "origin": f"insert_p2p({src.name!r} -> {dst.name!r})"})
         dag.splice_comm_on_edge(e, comm)
         existing[key] = comm.id
 
@@ -387,9 +388,10 @@ def merge_grad_reduces(dag: TrainingDAG) -> None:
                 dag.remove_node(n.id)
             keep.meta["accumulated"] = True
             keep.meta["n_accumulated"] = len(group)
-            for p in producers:
-                if p != keep.id and p in dag.nodes:
-                    dag.add_temporal(p, keep.id)
+            with dag.origin(f"merge_grad_reduces({bucket!r})"):
+                for p in producers:
+                    if p != keep.id and p in dag.nodes:
+                        dag.add_temporal(p, keep.id)
             new_sinks.append((keep.id, 0))
             dag.meta.setdefault("merged_reduces", 0)
             dag.meta["merged_reduces"] += len(group) - 1
@@ -430,6 +432,7 @@ def apply_offload(dag: TrainingDAG, payload: str = "act", depth: int = 2,
     index_of = {nid: i for seq in seq_of.values()
                 for i, nid in enumerate(seq)}
     pairs = 0
+    origin = f"Offload(depth={depth}, stream={stream!r})"
     for e in list(dag.edges):
         src, dst = dag.nodes[e.src], dag.nodes[e.dst]
         if not (src.is_chunk and dst.is_chunk) or e.dst_in < 0:
@@ -453,19 +456,22 @@ def apply_offload(dag: TrainingDAG, payload: str = "act", depth: int = 2,
             kind="comm", op="d2h", name=f"offload_out:{src.name}",
             dims=dict(dst.dims), devices=devices, group=devices,
             stream=f"{stream}#out", payload=payload, out_specs=[e.spec],
-            meta={"offload": True, "offload_static": static})
+            meta={"offload": True, "offload_static": static,
+                  "origin": origin})
         h2d = dag.new_node(
             kind="comm", op="h2d", name=f"offload_in:{dst.name}",
             dims=dict(dst.dims), devices=devices, group=devices,
             stream=f"{stream}#in", payload=payload, out_specs=[e.spec],
-            meta={"offload": True, "offload_static": static})
+            meta={"offload": True, "offload_static": static,
+                  "origin": origin})
         dag.edges.remove(e)
         dag.add_edge(e.src, e.src_out, d2h.id, 0, e.spec)
         dag.add_edge(d2h.id, 0, h2d.id, 0, e.spec)
         dag.add_edge(h2d.id, 0, e.dst, e.dst_in, e.spec)
         gate_j = index_of[e.dst] - depth
         if gate_j > index_of[e.src]:
-            dag.add_temporal(seq_of[devices][gate_j], h2d.id)
+            with dag.origin(origin):
+                dag.add_temporal(seq_of[devices][gate_j], h2d.id)
         pairs += 1
     dag.meta["offload"] = {"payload": payload, "depth": depth,
                            "stream": stream, "pairs": pairs}
@@ -489,16 +495,51 @@ def assign_default_devices(dag: TrainingDAG) -> None:
 
 def run_all(dag: TrainingDAG, overlap=None, offload=None) -> None:
     """``offload``: an ``(payload, depth, stream)``-shaped object (the
-    strategy's Offload fragment) or None."""
+    strategy's Offload fragment) or None.
+
+    Under ``REPRO_CHECK_PASSES=1`` (on by default in the test suite via
+    ``tests/conftest.py``) the DAG is re-validated at every pass
+    boundary, so a pass that corrupts edges or placement fails at its
+    own boundary instead of three passes later.  Streams/devices are
+    only fully assigned late in the pipeline, so the boundary check
+    runs ``toposort`` + dangling-edge checks (the full ``validate``
+    still runs once at the end)."""
+    import os
+    check = os.environ.get("REPRO_CHECK_PASSES", "") not in ("", "0")
+
+    def boundary(pass_name: str) -> None:
+        if not check:
+            return
+        try:
+            # dangling references first: toposort KeyErrors on them
+            for e in dag.edges:
+                if e.src not in dag.nodes or e.dst not in dag.nodes:
+                    raise ValueError(f"dangling edge {e}")
+            for (u, v) in dag.temporal:
+                if u not in dag.nodes or v not in dag.nodes:
+                    raise ValueError(f"dangling temporal edge {(u, v)}")
+            dag.toposort()
+        except ValueError as exc:
+            raise ValueError(
+                f"DAG invalid at pass boundary after {pass_name!r} "
+                f"(REPRO_CHECK_PASSES): {exc}") from exc
+
     assign_default_devices(dag)
+    boundary("assign_default_devices")
     insert_p2p(dag)
+    boundary("insert_p2p")
     elide_allgathers(dag)
+    boundary("elide_allgathers")
     merge_grad_reduces(dag)
+    boundary("merge_grad_reduces")
     if offload is not None:
         apply_offload(dag, payload=offload.payload, depth=offload.depth,
                       stream=offload.stream)
+        boundary("apply_offload")
     assign_default_streams(dag)
+    boundary("assign_default_streams")
     if overlap is not None:
         from .overlap import apply_overlap  # late: overlap imports us
         apply_overlap(dag, overlap)
+        boundary("apply_overlap")
     dag.validate()

@@ -9,7 +9,6 @@ only per-direction order must match across ranks)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 TaskKey = tuple[int, int, str]  # (node_id, device, role)
 

@@ -227,47 +227,19 @@ def validate_comm_order(dag: TrainingDAG, plan: GlobalPlan) -> None:
     (a) collectives: all ranks of a (group, stream) communicator must
         dispatch the group's collectives in the same order;
     (b) p2p: for each (src, dst, stream) direction, the send order on src
-        must equal the recv order on dst."""
-    # (a)
-    seqs: dict[tuple, dict[int, list[int]]] = defaultdict(dict)
-    for d, p in plan.device_plans.items():
-        for stream, keys in p.streams.items():
-            for key in keys:
-                nid, _, role = key
-                if role != ROLE_COLL:
-                    continue
-                node = dag.nodes[nid]
-                comm_key = (tuple(node.group), stream)
-                seqs[comm_key].setdefault(d, []).append(nid)
-    for (group, stream), per_dev in seqs.items():
-        ref = None
-        for d, seq in sorted(per_dev.items()):
-            if ref is None:
-                ref = seq
-            elif seq != ref:
-                raise ScheduleRejected(
-                    f"collective dispatch order differs across ranks of "
-                    f"group {group} on stream {stream!r}: {ref} vs {seq}")
-    # (b)
-    sends: dict[tuple, list[int]] = defaultdict(list)
-    recvs: dict[tuple, list[int]] = defaultdict(list)
-    for d, p in plan.device_plans.items():
-        for stream, keys in p.streams.items():
-            for key in keys:
-                nid, dev, role = key
-                node = dag.nodes[nid]
-                if role == ROLE_SEND:
-                    for (s, r) in node.meta["pairs"]:
-                        if s == dev:
-                            sends[(s, r, stream.rsplit("#", 1)[0])].append(nid)
-                elif role == ROLE_RECV:
-                    for (s, r) in node.meta["pairs"]:
-                        if r == dev:
-                            recvs[(s, r, stream.rsplit("#", 1)[0])].append(nid)
-    for pair_key in set(sends) | set(recvs):
-        if sends.get(pair_key, []) != recvs.get(pair_key, []):
-            raise ScheduleRejected(
-                f"p2p order mismatch on {pair_key}: sends "
-                f"{sends.get(pair_key)} vs recvs {recvs.get(pair_key)} — "
-                "downstream workers must consume microbatches in the order "
-                "produced (paper §4.3.2)")
+        must equal the recv order on dst.
+
+    The checks themselves live in the static verifier
+    (``repro.analysis.commorder``) which reports PIPER004/PIPER005
+    diagnostics naming the first diverging op and its provenance; a
+    violation raises ``PlanVerificationError``, a ``ScheduleRejected``
+    subclass, so callers keep working unchanged.  Imported function-
+    locally — core must stay importable without the analysis package
+    (and vice versa at module-load time)."""
+    from ..analysis.commorder import comm_order_diagnostics
+    from ..analysis.diagnostics import AnalysisReport
+    diags = comm_order_diagnostics(dag, plan)
+    if diags:
+        report = AnalysisReport(diagnostics=diags,
+                                meta={"pass": "comm_order"})
+        report.raise_if_errors()

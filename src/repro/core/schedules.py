@@ -28,7 +28,7 @@ tests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 from .directives import Order, Place, Split
 from .filters import F

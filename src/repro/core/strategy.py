@@ -48,7 +48,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from .directives import Directive, Order, Place, Replicate, Shard, Split
+from .directives import Directive, Replicate, Shard
 from .filters import F
 from .overlap import OverlapConfig
 from .passes import REMAT_POLICIES
@@ -767,6 +767,8 @@ class Strategy:
         if self.raw:
             return [d for f in self.raw for d in f.directives]
         pipe = self.pipeline
+        pipe_origin = (f"Pipeline(schedule={pipe.schedule!r}, "
+                       f"n_mb={pipe.n_mb})" if pipe is not None else None)
         if pipe is None:
             raise StrategyError(
                 "strategy has no Pipeline fragment — nothing defines "
@@ -797,6 +799,8 @@ class Strategy:
                 f"{ep_dim!r}-annotated chunks to shard")
 
         extra: list = []
+        zero_origin = (f"ZeRO(stage={zero.stage}, axis={zero.axis!r})"
+                       if zero is not None else None)
         for s in range(S):
             g = list(groups[rank_of_stage(pipe.schedule, s, pp, S)])
             if zero is not None:
@@ -807,10 +811,13 @@ class Strategy:
                     shard_grads=zero.stage >= 2,
                     shard_params=zero.stage >= 3,
                     bucket_sz=(zero.bucket_mb << 20) or None))
+                extra[-1].origin = zero_origin
             if s in expert_stages:
                 if ep is not None:
                     extra.append(Shard(F(**{pipe.axis: s, ep_dim: "*"}),
                                        devices=g, stream=ep.stream))
+                    extra[-1].origin = (f"ExpertParallel(axis={ep.axis!r}, "
+                                        f"dim={ep.dim!r})")
                 elif zero is not None:
                     extra.append(Replicate(
                         F(**{pipe.axis: s, ep_dim: "*"}), devices=g,
@@ -819,6 +826,13 @@ class Strategy:
                         shard_grads=zero.stage >= 2,
                         shard_params=zero.stage >= 3,
                         bucket_sz=(zero.bucket_mb << 20) or None))
+                    extra[-1].origin = zero_origin
+        # provenance for the static verifier: every emitted directive
+        # names its source fragment; the compiler threads the label into
+        # Node.meta["origin"] via dag.origin() around directive.apply().
+        for d in places + [split] + orders:
+            if getattr(d, "origin", None) is None:
+                d.origin = pipe_origin
         return places + extra + [split] + orders
 
     # -- serialization ------------------------------------------------------

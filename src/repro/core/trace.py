@@ -24,7 +24,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .dag import PASS_F, Node, TrainingDAG, ValueSpec, tree_nbytes
+from .dag import PASS_F, TrainingDAG, ValueSpec, tree_nbytes
 
 
 def np_prod(shape) -> int:
@@ -122,7 +122,10 @@ class Recorder:
                 n_outputs=len(outs),
                 out_specs=[ValueSpec(tuple(o.shape), str(o.dtype))
                            for o in outs],
-                meta={"single_output": single, "n_inputs": len(args)},
+                meta={"single_output": single, "n_inputs": len(args),
+                      "origin": f"region({name or getattr(fn, '__name__', 'region')!r}"
+                                + (f", bucket={bucket!r}" if bucket else "")
+                                + ")"},
             )
             if bucket:
                 b = self.dag.bucket_of(bucket)

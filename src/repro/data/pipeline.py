@@ -13,7 +13,6 @@ import pathlib
 from dataclasses import dataclass
 from typing import Optional
 
-import jax
 import numpy as np
 
 

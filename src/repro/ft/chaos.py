@@ -30,12 +30,10 @@ aliases over ``ChaosInjector`` kept for existing callers.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import random as _random
-import time
 from dataclasses import dataclass, field, fields
-from typing import Any, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 

@@ -32,7 +32,7 @@ checkpoint — not across the mesh change.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -49,8 +49,7 @@ from .chaos import (ChaosInjector, ChaosReport, FaultSchedule,
                     WorkerFailure, check_numerics, corrupt_latest)
 from .regrow import GrowthPlan, GrowthReport, RegrowthError, \
     grow_for_arrivals
-from .supervisor import (FailureInjector, StragglerWatchdog,
-                         check_stream_position)
+from .supervisor import StragglerWatchdog, check_stream_position
 
 
 class ElasticError(RuntimeError):

@@ -18,7 +18,6 @@ a checkpoint boundary costs zero compiles and zero lost steps.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
 
 from ..core.strategy import Mesh, Strategy, StrategyError
 

@@ -14,12 +14,10 @@ chunked formulation at the JAX level for sequence-level parallelism.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_C = 128
 

@@ -7,7 +7,6 @@ budget, and MXU-aligned).  Grid: (E, cap/BLOCK_M, f/BLOCK_N).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from ..models import layers as L
 from ..models.attention import _flash_bwd

@@ -32,7 +32,7 @@ from repro.launch.hostdevices import ensure_host_devices
 if __name__ == "__main__":  # before the jax import locks device count
     ensure_host_devices(512, verify=False)
 
-import jax
+import jax  # noqa: F401  (must import after ensure_host_devices)
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch import hlo_stats

@@ -14,7 +14,6 @@ corrects trip counts via unrolled probe compiles (launch/dryrun.py).
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 

@@ -15,9 +15,8 @@ gets token embeddings + 3-stream M-RoPE position ids.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
 from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -3,11 +3,8 @@ the mesh with the sharding rules (the Piper strategy lowered to pjit —
 DESIGN.md §2, 'logical streams -> XLA scheduling lanes')."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import numpy as np

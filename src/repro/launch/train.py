@@ -12,7 +12,6 @@ the run resumes from the last checkpoint with the exact data stream.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import pathlib
 import time
 

@@ -8,16 +8,13 @@ the chunked-jnp references run everywhere (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attention import chunked_attention, decode_attention
+from .attention import decode_attention
 
 # ---------------------------------------------------------------------------
 # impl registry (kernels plug in here)

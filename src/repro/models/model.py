@@ -16,9 +16,7 @@ Public entry points (all pure):
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax

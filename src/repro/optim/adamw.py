@@ -3,7 +3,6 @@ clipping.  Pure functions over pytrees so pjit shards the moments with
 the ZeRO rules in parallel/sharding.py."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -17,10 +17,8 @@ Strategy (the Piper high-level plan lowered to pjit):
 """
 from __future__ import annotations
 
-import dataclasses
-import re
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

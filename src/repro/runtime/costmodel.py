@@ -7,13 +7,10 @@ standard ring/all-to-all models over ICI.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import lru_cache
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 # TPU v5e (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s

@@ -28,12 +28,15 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.compiler import CompiledProgram
 from ..core.dag import Node, TrainingDAG
-from ..core.plan import (ROLE_COLL, ROLE_COMPUTE, ROLE_RECV, ROLE_SEND,
-                         GlobalPlan, Task, TaskKey)
+from ..core.plan import (ROLE_COLL,
+                         ROLE_RECV,
+                         ROLE_SEND,
+                         GlobalPlan,
+                         Task,
+                         TaskKey)
 from .memory import (GRAD_BYTES_PER_ELEM, DeviceLedger,
                      bucket_persistent_bytes, gather_param_bytes)
 

@@ -13,6 +13,7 @@ Mixed-precision convention (Megatron-style, used for accounting):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 WEIGHT_BYTES_PER_ELEM = 2
 GRAD_BYTES_PER_ELEM = 4
@@ -27,6 +28,13 @@ class DeviceLedger:
     peak: int = 0
     # live transient allocations: key -> bytes
     live: dict = field(default_factory=dict)
+    # lifetime-event hook (static verifier): when a list is supplied,
+    # every transition is recorded as (kind, key, nbytes) — including
+    # the anomalous ``double_alloc`` (alloc of a live key, normally
+    # ignored) and ``double_free`` (free of a dead key, normally a
+    # no-op).  The interpreter leaves this None: its accounting is
+    # unchanged.
+    events: Optional[list] = None
 
     def alloc_persistent(self, nbytes: int) -> None:
         self.persistent += nbytes
@@ -35,12 +43,20 @@ class DeviceLedger:
 
     def alloc(self, key, nbytes: int) -> None:
         if key in self.live:
+            if self.events is not None:
+                self.events.append(("double_alloc", key, nbytes))
             return
+        if self.events is not None:
+            self.events.append(("alloc", key, nbytes))
         self.live[key] = nbytes
         self.current += nbytes
         self.peak = max(self.peak, self.current)
 
     def free(self, key) -> None:
+        if self.events is not None:
+            self.events.append(
+                ("free" if key in self.live else "double_free", key,
+                 self.live.get(key, 0)))
         nbytes = self.live.pop(key, 0)
         self.current -= nbytes
 
@@ -108,26 +124,7 @@ def timeline_peak_bytes(prog, records) -> dict:
             cons[(e.src, d)] = cons.get((e.src, d), 0) + 1
 
     def out_bytes(n) -> int:
-        total = sum(s.nbytes for s in n.out_specs)
-        if n.is_comm and n.op == "p2p":
-            # pairwise replica transfer: each receiver holds its own
-            # producer's shard (1/len(pairs) of the spec); a
-            # single-source fan-out delivers the full value to every
-            # receiver
-            pairs = n.meta.get("pairs") or ()
-            srcs = {s for (s, _) in pairs}
-            if len(pairs) > 1 and len(srcs) == len(pairs):
-                return total // len(pairs)
-            return total
-        k = len(n.devices or ()) or 1
-        if n.is_comm and n.meta.get("offload_static"):
-            # batch-static residual offload: a full copy per replica
-            return total
-        if k > 1 and (n.meta.get("placement_mode") in
-                      ("replicate", "shard_expert")
-                      or (n.is_comm and n.payload == "act")):
-            return total // k
-        return total
+        return node_out_bytes(n)
 
     # ZeRO-3 gather lifetimes: gather node -> consuming chunks per device
     gather_left: dict = {}
@@ -182,6 +179,33 @@ def timeline_peak_bytes(prog, records) -> dict:
             if not gather_left[(g, d)]:
                 led.free(("fullparam", g))
     return {d: led.peak for d, led in ledgers.items()}
+
+
+def node_out_bytes(n) -> int:
+    """Per-device activation bytes a node's outputs pin — the sizing rule
+    shared by the static timeline estimator above and the verifier's
+    abstract executor (``repro.analysis.abstract``), so their ledgers
+    are comparable buffer for buffer."""
+    total = sum(s.nbytes for s in n.out_specs)
+    if n.is_comm and n.op == "p2p":
+        # pairwise replica transfer: each receiver holds its own
+        # producer's shard (1/len(pairs) of the spec); a
+        # single-source fan-out delivers the full value to every
+        # receiver
+        pairs = n.meta.get("pairs") or ()
+        srcs = {s for (s, _) in pairs}
+        if len(pairs) > 1 and len(srcs) == len(pairs):
+            return total // len(pairs)
+        return total
+    k = len(n.devices or ()) or 1
+    if n.is_comm and n.meta.get("offload_static"):
+        # batch-static residual offload: a full copy per replica
+        return total
+    if k > 1 and (n.meta.get("placement_mode") in
+                  ("replicate", "shard_expert")
+                  or (n.is_comm and n.payload == "act")):
+        return total // k
+    return total
 
 
 def gather_param_bytes(dag, gnode) -> int:

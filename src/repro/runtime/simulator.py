@@ -24,14 +24,13 @@ import heapq
 import math
 
 EPS = 1e-12  # scheduling-time float tolerance
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 
 from ..core.compiler import CompiledProgram
-from ..core.plan import (ROLE_COLL, ROLE_COMPUTE, ROLE_RECV, ROLE_SEND,
-                         GlobalPlan, Task, TaskKey)
+from ..core.plan import ROLE_COMPUTE, GlobalPlan, Task, TaskKey
 from .costmodel import CostModel
 
 

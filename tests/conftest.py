@@ -1,0 +1,10 @@
+"""Suite-wide defaults.
+
+``REPRO_CHECK_PASSES=1`` re-validates the DAG at every compiler pass
+boundary (``passes.run_all``) so a pass that corrupts the graph fails
+at its own boundary instead of three passes later.  On by default for
+the whole suite; export ``REPRO_CHECK_PASSES=0`` to opt out.
+"""
+import os
+
+os.environ.setdefault("REPRO_CHECK_PASSES", "1")

@@ -1,0 +1,344 @@
+"""Static plan verifier (repro.analysis, DESIGN.md §15).
+
+- clean plans across schedules x ZeRO stages (and the overlap engine)
+  verify clean at deep depth — the abstract executor replays every task;
+- golden hand-mutated plans each produce their expected PIPER code with
+  directive provenance: dropped recv (PIPER003/005), reordered
+  collective (PIPER004), duplicated grad reduce — double-freed stash
+  (PIPER007), reduce torn off its stream — racy pair (PIPER010), a
+  full-param buffer with no releasing consumer (PIPER008);
+- the PR 4 regression: all-gathers fused across the F->B boundary
+  starve the gather rate limiter — rejected *statically* with PIPER002
+  naming the semaphore cycle;
+- the scheduler's comm-order validation now routes through the verifier
+  (PlanVerificationError carries the report; legacy message substrings
+  preserved);
+- compile_training embeds the quick subset; the lint CLI surfaces.
+"""
+import copy
+import json
+
+import jax
+import pytest
+from helpers import inputs_spec, make_mlp_forward, make_mlp_params
+
+from repro.analysis import CODES, PlanVerificationError, analyze
+from repro.analysis.abstract import AbstractExecutor, Execution, StuckState
+from repro.core.compiler import compile_training
+from repro.core.plan import ScheduleRejected
+from repro.core.scheduler import build_plan, validate_comm_order
+from repro.core.strategy import Mesh, Overlap, Pipeline, Strategy, ZeRO
+
+S, D, BATCH = 4, 16, 8
+
+
+def compile_mlp(sched="1f1b", zero=3, n_mb=4, overlap=False, **kw):
+    frags = Pipeline(sched, n_mb=n_mb) | ZeRO(stage=zero)
+    if overlap:
+        frags = frags | Overlap(prefetch=2, bucket_mb=64)
+    params = make_mlp_params(jax.random.PRNGKey(0), S, D)
+    return compile_training(make_mlp_forward(S), params,
+                            inputs_spec(BATCH, D),
+                            strategy=Strategy(Mesh(pp=2, dp=2), frags),
+                            **kw)
+
+
+# ---------------------------------------------------------------------------
+# clean plans
+# ---------------------------------------------------------------------------
+
+class TestCleanPlans:
+    @pytest.mark.parametrize("sched,zero", [
+        ("1f1b", 0), ("1f1b", 3), ("gpipe", 0), ("gpipe", 3),
+        ("dualpipev", 0), ("dualpipev", 3)])
+    def test_deep_verifies_clean(self, sched, zero):
+        prog = compile_mlp(sched, zero)
+        report = analyze(prog, depth="deep")
+        assert report.ok, report.format_text()
+        assert report.diagnostics == []
+        assert "completed" in report.meta["abstract"]
+
+    def test_overlap_engine_plan_clean(self):
+        prog = compile_mlp("1f1b", 3, overlap=True)
+        report = analyze(prog, depth="deep")
+        assert report.ok, report.format_text()
+        # PIPER009 is a warning, so assert it separately: the abstract
+        # ledger and the static estimator must agree on transient peaks
+        assert report.by_code("PIPER009") == []
+
+    def test_abstract_executor_replays_every_task(self):
+        prog = compile_mlp("1f1b", 3)
+        outcome = AbstractExecutor(prog).run()
+        assert isinstance(outcome, Execution)
+        total = sum(p.n_tasks()
+                    for p in prog.plan.device_plans.values())
+        assert len(outcome.exec_order) == total
+        assert outcome.events == []
+        assert outcome.leftover_values == []
+        assert outcome.leftover_buffers == []
+
+    def test_clean_plan_survives_tight_gather_limit(self):
+        # per-pass gathers release promptly: even one permit suffices
+        prog = compile_mlp("1f1b", 3)
+        report = analyze(prog, depth="deep", gather_limit=1)
+        assert report.ok, report.format_text()
+
+
+# ---------------------------------------------------------------------------
+# golden mutations
+# ---------------------------------------------------------------------------
+
+def drop_one_recv(plan):
+    for d, dp in sorted(plan.device_plans.items()):
+        for key in list(dp.tasks):
+            if key[2] == "recv":
+                del dp.tasks[key]
+                for keys in dp.streams.values():
+                    if key in keys:
+                        keys.remove(key)
+                return key
+    raise AssertionError("no recv task found")
+
+
+class TestGoldenMutations:
+    def test_dropped_recv_is_unsatisfiable_wait(self):
+        prog = compile_mlp()
+        mut = copy.deepcopy(prog)
+        key = drop_one_recv(mut.plan)
+        report = analyze(mut, depth="deep")
+        assert not report.ok
+        codes = set(report.codes())
+        assert "PIPER003" in codes    # consumer waits on the missing task
+        assert "PIPER005" in codes    # send order no longer matches recvs
+        d3 = report.by_code("PIPER003")[0]
+        assert key[0] in d3.nodes
+        assert "exists in no device plan" in d3.message
+        # provenance names the pass that created the p2p
+        assert any("insert_p2p" in p for p in d3.provenance)
+
+    def test_reordered_collective_breaks_dispatch_order(self):
+        prog = compile_mlp()
+        mut = copy.deepcopy(prog)
+        for dp in mut.plan.device_plans.values():
+            for keys in dp.streams.values():
+                colls = [i for i, k in enumerate(keys) if k[2] == "coll"]
+                if len(colls) >= 2:
+                    i, j = colls[0], colls[1]
+                    keys[i], keys[j] = keys[j], keys[i]
+                    report = analyze(mut, depth="quick")
+                    d4 = report.by_code("PIPER004")
+                    assert d4, report.format_text()
+                    assert "dispatch order" in d4[0].message
+                    assert "first divergence" in d4[0].message
+                    assert d4[0].provenance
+                    return
+        raise AssertionError("no stream with two collectives")
+
+    def test_duplicated_reduce_double_frees_the_stash(self):
+        prog = compile_mlp("1f1b", 0, analyze="off")
+        dag = prog.dag
+        ar = next(n for n in dag.comms()
+                  if n.op == "all_reduce" and n.payload == "grad")
+        with dag.origin("test_duplicate_reduce"):
+            dup = dag.new_node(
+                kind="comm", op="all_reduce", name=f"dup_{ar.name}",
+                dims=dict(ar.dims), devices=ar.devices, stream=ar.stream,
+                group=ar.group, payload="grad",
+                out_specs=list(ar.out_specs),
+                meta={"bucket": ar.meta.get("bucket"),
+                      "accumulated": ar.meta.get("accumulated")})
+            for e in dag.in_edges(ar.id):
+                dag.add_edge(e.src, e.src_out, dup.id, e.dst_in, e.spec)
+            dag.add_temporal(ar.id, dup.id)
+        prog.plan = build_plan(dag)
+        report = analyze(prog, depth="deep")
+        d7 = report.by_code("PIPER007")
+        assert d7, report.format_text()
+        assert "empty accumulation stash" in d7[0].message
+        assert any("test_duplicate_reduce" in p for p in d7[0].provenance)
+
+    def test_unordered_reduce_is_a_stream_race(self):
+        prog = compile_mlp("1f1b", 0)
+        mut = copy.deepcopy(prog)
+        ar = next(n for n in mut.dag.comms()
+                  if n.op == "all_reduce" and n.payload == "grad"
+                  and n.meta.get("accumulated"))
+        for d, dp in mut.plan.device_plans.items():
+            key = (ar.id, d, "coll")
+            if key not in dp.tasks:
+                continue
+            t = dp.tasks[key]
+            # tear the reduce off its stream onto an unordered one and
+            # drop its deps — the classic lost-ordering-edge bug
+            for keys in dp.streams.values():
+                if key in keys:
+                    keys.remove(key)
+            t.stream = "rogue_reduce"
+            t.deps = []
+            dp.streams.setdefault("rogue_reduce", []).append(key)
+        report = analyze(mut, depth="quick")
+        d10 = report.by_code("PIPER010")
+        assert d10, report.format_text()
+        assert "no ordering edge" in d10[0].message
+        assert d10[0].details["reduce_stream"] == "rogue_reduce"
+        assert any("autodiff" in p for p in d10[0].provenance)
+        # deep agrees: the reduce fires before any backward wrote grads
+        deep = analyze(mut, depth="deep")
+        assert "PIPER007" in deep.codes()
+
+    def test_unreleased_fullparam_leaks(self):
+        prog = compile_mlp("1f1b", 3)
+        mut = copy.deepcopy(prog)
+        victim = next(
+            n for n in mut.dag.nodes.values()
+            if n.is_chunk and n.meta.get("param_from_comm") is not None
+            and n.dims.get("PASS") == "B")
+        victim.meta.pop("param_from_comm")
+        report = analyze(mut, depth="deep")
+        d8 = report.by_code("PIPER008")
+        assert d8, report.format_text()
+        assert any(d.details.get("buffer_kind") == "fullparam"
+                   for d in d8)
+
+
+# ---------------------------------------------------------------------------
+# the PR 4 regression, statically
+# ---------------------------------------------------------------------------
+
+class TestGatherFusionRegression:
+    def _fuse_gathers_across_fb(self, prog):
+        """Re-create the PR 4 bug: backward chunks reuse the *forward*
+        gather's full-param buffer, so the buffer stays live across the
+        whole F->B window and the rate limiter starves."""
+        dag = prog.dag
+        fwd_gather = {}
+        for n in dag.nodes.values():
+            g = n.meta.get("param_from_comm")
+            if g is not None and n.is_chunk and n.dims.get("PASS") == "F":
+                fwd_gather[(n.bucket, n.dims.get("MB"))] = g
+        doomed = set()
+        for n in dag.nodes.values():
+            g = n.meta.get("param_from_comm")
+            if g is None or not n.is_chunk:
+                continue
+            if n.dims.get("PASS") in ("B", "Bi", "Bw"):
+                fg = fwd_gather.get((n.bucket, n.dims.get("MB")))
+                if fg is not None and fg != g:
+                    doomed.add(g)
+                    n.meta["param_from_comm"] = fg
+        for g in doomed:
+            dag.remove_node(g)
+        prog.plan = build_plan(dag)
+        return prog
+
+    def test_fb_fused_gathers_deadlock_on_rate_limiter(self):
+        prog = self._fuse_gathers_across_fb(compile_mlp("1f1b", 3))
+        report = analyze(prog, depth="deep", gather_limit=1)
+        d2 = report.by_code("PIPER002")
+        assert d2, report.format_text()
+        msg = d2[0].message
+        assert "rate-limiter" in msg and "gather_limit=1" in msg
+        # the cycle names both the starved gather and the holder, with
+        # the directives that introduced them
+        assert any("ZeRO" in p for p in d2[0].provenance)
+        assert "limiter" in d2[0].details["edge_kinds"]
+        assert d2[0].details["cycle"]
+
+    def test_same_mutation_is_caught_without_execution_too(self):
+        # the stuck state is reached abstractly — no interpreter, no XLA
+        prog = self._fuse_gathers_across_fb(compile_mlp("1f1b", 3))
+        outcome = AbstractExecutor(prog, gather_limit=1).run()
+        assert isinstance(outcome, StuckState)
+        assert outcome.limiter_blocked
+        assert outcome.executed < outcome.total
+
+
+# ---------------------------------------------------------------------------
+# scheduler delegation + compiler embedding
+# ---------------------------------------------------------------------------
+
+class TestIntegration:
+    def test_comm_order_violation_carries_report(self):
+        prog = compile_mlp()
+        mut = copy.deepcopy(prog)
+        for dp in mut.plan.device_plans.values():
+            for keys in dp.streams.values():
+                colls = [i for i, k in enumerate(keys) if k[2] == "coll"]
+                if len(colls) >= 2:
+                    i, j = colls[0], colls[1]
+                    keys[i], keys[j] = keys[j], keys[i]
+                    with pytest.raises(ScheduleRejected,
+                                       match="dispatch order") as ei:
+                        validate_comm_order(mut.dag, mut.plan)
+                    assert isinstance(ei.value, PlanVerificationError)
+                    assert "PIPER004" in ei.value.report.codes()
+                    return
+        raise AssertionError("no stream with two collectives")
+
+    def test_compile_embeds_quick_analysis(self):
+        prog = compile_mlp()
+        assert prog.stats["analysis"] == {
+            "depth": "quick", "diagnostics": 0, "codes": []}
+        deep = compile_mlp(analyze="deep")
+        assert deep.stats["analysis"]["depth"] == "deep"
+        off = compile_mlp(analyze="off")
+        assert "analysis" not in off.stats
+
+    def test_compile_rejects_bad_depth(self):
+        with pytest.raises(ValueError, match="depth"):
+            compile_mlp(analyze="paranoid")
+
+    def test_pass_boundary_check_catches_dangling_edges(self, monkeypatch):
+        from repro.core import passes
+        monkeypatch.setenv("REPRO_CHECK_PASSES", "1")
+        prog = compile_mlp(analyze="off")
+        dag = prog.dag
+        dag.temporal.add((10 ** 6, next(iter(dag.nodes))))
+        with pytest.raises(ValueError, match="pass boundary"):
+            passes.run_all(dag)
+
+    def test_diagnostic_codes_are_stable(self):
+        assert set(CODES) == {f"PIPER{i:03d}" for i in range(1, 12)}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestLintCLI:
+    def test_grid_subset_clean(self, tmp_path, capsys):
+        from repro.launch.lint import main
+        out = tmp_path / "lint.json"
+        rc = main(["--grid", "--arch", "qwen1.5-0.5b",
+                   "--json", "--out", str(out)])
+        assert rc == 0
+        result = json.loads(out.read_text())
+        assert result["ok"] and len(result["cells"]) == 6
+        assert all(c["codes"] == [] for c in result["cells"])
+        assert json.loads(capsys.readouterr().out)["ok"]
+
+    def test_strategy_file_lints_clean(self, tmp_path, capsys):
+        from repro.launch.lint import main
+        strat = Strategy(Mesh(pp=2, dp=2),
+                         Pipeline("1f1b", n_mb=4) | ZeRO(stage=3))
+        f = tmp_path / "strategy.json"
+        f.write_text(strat.to_json())
+        rc = main(["--strategy", str(f), "--config", "qwen3-1b"])
+        assert rc == 0
+        assert "0 with errors" in capsys.readouterr().out
+
+    def test_strategy_without_pipeline_is_compile_error(self, tmp_path,
+                                                        capsys):
+        from repro.launch.lint import main
+        # to_json refuses to serialize an invalid strategy, so craft the
+        # bad artifact by stripping the Pipeline fragment from a valid one
+        strat = Strategy(Mesh(pp=2, dp=2),
+                         Pipeline("1f1b", n_mb=4) | ZeRO(stage=3))
+        doc = json.loads(strat.to_json())
+        doc["fragments"] = [f for f in doc["fragments"]
+                            if f.get("kind") != "pipeline"]
+        f = tmp_path / "strategy.json"
+        f.write_text(json.dumps(doc))
+        rc = main(["--strategy", str(f)])
+        assert rc == 2
+        assert "COMPILE-ERROR" in capsys.readouterr().out

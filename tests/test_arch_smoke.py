@@ -10,8 +10,7 @@ import pytest
 pytestmark = pytest.mark.slow  # full-family sweep; scripts/tier1.sh skips
 
 from repro.configs import ARCHS, get_config
-from repro.models import (decode_step, init, init_cache, params_count,
-                          prefill, train_loss)
+from repro.models import decode_step, init, params_count, prefill, train_loss
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -14,10 +14,7 @@ restored the same checkpoint onto the same shrunk mesh, bit for bit in
 fp64, across {1f1b, gpipe} x ZeRO{0, 3}.
 """
 import json
-import os
 import pathlib
-import subprocess
-import sys
 
 import jax
 import numpy as np

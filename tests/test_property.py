@@ -15,7 +15,6 @@
   FaultSchedule JSON round-trips any random schedule byte-stably.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -27,7 +26,7 @@ from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E
 from helpers import (assert_grads_close, inputs_spec, make_batch,
                      make_mlp_forward, make_mlp_params, mlp_oracle,
                      raw_strategy)
-from repro.core import F, Order, Place, Replicate, Split, compile_training
+from repro.core import F, Place, Replicate, Split, compile_training
 from repro.core.dag import Node
 from repro.core.schedules import PipeOp, build_rank_sequences
 from repro.runtime import Interpreter

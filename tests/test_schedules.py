@@ -9,8 +9,9 @@ from helpers import (assert_grads_close, inputs_spec, make_batch,
                      raw_strategy)
 from repro.core import (F, Order, Place, Replicate, ScheduleRejected, Split,
                         compile_training)
-from repro.core.schedules import (PipeOp, build_rank_sequences,
-                                  canonical_1f1b, emit_directives,
+from repro.core.schedules import (build_rank_sequences,
+                                  canonical_1f1b,
+                                  emit_directives,
                                   stages_of_rank)
 from repro.runtime import Interpreter
 

@@ -396,8 +396,7 @@ class TestCandidateBridge:
         """tune.build_candidate_program (Strategy path) matches the
         lowered candidate_directives list applied by hand."""
         from repro.configs import get_config
-        from repro.tune import (build_candidate_program,
-                                candidate_directives, decompose)
+        from repro.tune import build_candidate_program, candidate_directives
         from repro.tune.proxy import (make_proxy_forward,
                                       make_proxy_params)
         cfg = get_config("qwen3-1b")

@@ -1,8 +1,6 @@
 """Substrate tests: data pipeline determinism/sharding/resume,
 checkpoint save/restore/corruption/gc, FT supervisor restart semantics,
 optimizer + schedules, and the end-to-end train driver."""
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -10,11 +8,10 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, restore_tree, save_tree
-from repro.data import DataState, SyntheticTokenSource, TokenLoader
+from repro.data import SyntheticTokenSource, TokenLoader
 from repro.ft import FailureInjector, StragglerWatchdog, Supervisor
 from repro.ft.supervisor import WorkerFailure
-from repro.optim import (adamw_init, adamw_update, cosine_schedule,
-                         global_norm, wsd_schedule)
+from repro.optim import adamw_init, adamw_update, cosine_schedule, wsd_schedule
 
 jax.config.update("jax_platform_name", "cpu")
 
