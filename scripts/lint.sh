@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Static verification, locally reproducing the CI tier1-lint job:
+#   1. ruff check src tests        (rule set in ruff.toml)
+#   2. the typed deep plan-lint grid — 12 configs x (6 schedule/ZeRO
+#      cells + 3 remat/offload memory cells), shape/dtype/shard
+#      typechecker and per-rank interface signatures included
+#      (the MPMD-readiness gate; see docs/lint.md)
+#
+# No XLA execution anywhere: plans are compiled at reduced size and
+# analyzed structurally, so the whole thing finishes in seconds.
+#
+# Usage: scripts/lint.sh [extra lint-grid args, e.g. --arch qwen3-1b]
+#   LINT_TIMEOUT=60  hard wall-clock cap for the grid (default 60)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if command -v ruff > /dev/null 2>&1; then
+    ruff check src tests
+elif python -c "import ruff" > /dev/null 2>&1; then
+    python -m ruff check src tests
+else
+    echo "lint.sh: ruff not installed, skipping the style leg" >&2
+fi
+
+exec timeout "${LINT_TIMEOUT:-60}" \
+    python -m repro.launch.lint --grid --depth deep "$@"

@@ -29,6 +29,16 @@ CODES = {
     "PIPER009": "memory accounting diverges from the static estimator",
     "PIPER010": "stream race: unordered access to a shared buffer",
     "PIPER011": "interface mismatch across communication endpoints",
+    # -- semantic layer (PR 9): shape/dtype/shard typechecker + the
+    #    translation validator (docs/lint.md, DESIGN.md §16) ----------------
+    "PIPER020": "dtype mismatch at a data edge",
+    "PIPER021": "shape mismatch or unfed/duplicated input slot",
+    "PIPER022": "shard-spec disagreement at a collective endpoint",
+    "PIPER023": "shape-incompatible collective fusion",
+    "PIPER024": "mb_split microbatch token non-conservation",
+    "PIPER025": "per-rank interface signature mismatch (MPMD readiness)",
+    "PIPER026": "translation validation: pass changed the dataflow "
+                "fingerprint",
 }
 
 SEVERITIES = ("error", "warning")
@@ -36,12 +46,22 @@ SEVERITIES = ("error", "warning")
 
 def node_provenance(dag, nid: int) -> str:
     """``[17]all_gather:stage0(...) <- ZeRO(stage=3, axis='dp')`` — the
-    node's short description plus the origin label that introduced it."""
+    node's short description plus the origin label that introduced it.
+    Nodes a compiler pass *rewrote in place* (remat stash rewrites,
+    merged grad reduces, elision survivors) additionally render the pass
+    under ``meta["pass"]``: ``... <- autodiff(B of 's0') <-
+    pass:apply_remat``."""
     node = dag.nodes.get(nid)
     if node is None:
         return f"[{nid}]<removed node>"
+    out = node.short()
     origin = node.meta.get("origin")
-    return node.short() + (f" <- {origin}" if origin else "")
+    if origin:
+        out += f" <- {origin}"
+    pass_name = node.meta.get("pass")
+    if pass_name:
+        out += f" <- pass:{pass_name}"
+    return out
 
 
 @dataclass

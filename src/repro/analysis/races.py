@@ -65,7 +65,7 @@ def race_diagnostics(dag, plan: GlobalPlan) -> list[Diagnostic]:
 
     pred: dict[TaskKey, TaskKey] = {}
     for d, p in plan.device_plans.items():
-        for s, keys in p.streams.items():
+        for keys in p.streams.values():
             for i in range(1, len(keys)):
                 pred[keys[i]] = keys[i - 1]
 

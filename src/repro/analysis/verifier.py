@@ -1,9 +1,11 @@
 """The pass pipeline: ``analyze(prog, depth)`` -> ``AnalysisReport``.
 
 ``depth="quick"`` runs the pure graph passes — interface consistency,
-communication ordering, stream races.  They are a few linear scans of
-the DAG and plan (no abstract execution), cheap enough to run on every
-``compile_training`` call.
+communication ordering, stream races, and (unless ``types=False``) the
+semantic layer: the shape/dtype/shard typechecker plus the pairwise
+per-rank interface-signature check (PIPER020–025, ``types.py``).  They
+are a few linear scans of the DAG and plan (no abstract execution),
+cheap enough to run on every ``compile_training`` call.
 
 ``depth="deep"`` adds the abstract executor: the whole ``GlobalPlan`` is
 replayed under the interpreter's dispatch rules (including the gather
@@ -23,6 +25,7 @@ from .diagnostics import AnalysisReport, Diagnostic
 from .interfaces import interface_diagnostics
 from .lifetime import lifetime_diagnostics
 from .races import race_diagnostics
+from .types import rank_interface_diagnostics, type_diagnostics
 
 DEPTHS = ("quick", "deep")
 
@@ -65,8 +68,13 @@ def _memory_crosscheck(prog, execution: Execution) -> list[Diagnostic]:
 
 
 def analyze(prog, depth: str = "quick",
-            gather_limit: Optional[int] = None) -> AnalysisReport:
+            gather_limit: Optional[int] = None,
+            types: bool = True) -> AnalysisReport:
     """Run the static verifier on a compiled program.
+
+    ``types=True`` (the default) includes the semantic layer — the
+    shape/dtype/shard typechecker and the pairwise per-rank interface
+    signatures (the MPMD-readiness check) — at every depth.
 
     Returns an :class:`AnalysisReport`; raises nothing — callers decide
     via ``report.raise_if_errors()``.
@@ -76,6 +84,7 @@ def analyze(prog, depth: str = "quick",
     dag, plan = prog.dag, prog.plan
     report = AnalysisReport(meta={
         "depth": depth,
+        "types": bool(types),
         "devices": len(plan.devices),
         "tasks": sum(p.n_tasks() for p in plan.device_plans.values()),
         "nodes": len(dag.nodes),
@@ -83,6 +92,9 @@ def analyze(prog, depth: str = "quick",
     report.extend(interface_diagnostics(dag, plan))
     report.extend(comm_order_diagnostics(dag, plan))
     report.extend(race_diagnostics(dag, plan))
+    if types:
+        report.extend(type_diagnostics(dag, plan))
+        report.extend(rank_interface_diagnostics(dag, plan))
     if depth == "deep":
         outcome = AbstractExecutor(prog, gather_limit=gather_limit).run()
         if isinstance(outcome, StuckState):

@@ -217,7 +217,7 @@ class CheckpointManager:
         d = self._dir(step)
         try:
             manifest = load_manifest(d)
-            for name, meta in manifest["leaves"].items():
+            for meta in manifest["leaves"].values():
                 arr = np.load(d / meta["file"])
                 want = np.dtype(meta["dtype"])
                 if arr.dtype != want and arr.dtype.kind == "V" \

@@ -92,6 +92,35 @@ class CompiledProgram:
         return out
 
 
+def _certified_remat(dag: TrainingDAG, remat, params: dict) -> None:
+    """Run ``passes.apply_remat`` under translation validation: remat
+    rewrites forward/backward pairs in place (stash residuals as extra
+    outputs, re-wire the backward's inputs), which must leave the
+    dataflow fingerprint unchanged — ``Remat`` trades memory for
+    recompute, never math.  Certification is on under
+    ``REPRO_CHECK_PASSES=1`` (the whole test suite; see
+    tests/conftest.py), matching the ``passes.run_all`` boundaries."""
+    import os
+    check = os.environ.get("REPRO_CHECK_PASSES", "") not in ("", "0")
+    before = None
+    if check:
+        from ..analysis.equiv import dataflow_fingerprint_safe
+        before = dataflow_fingerprint_safe(dag)
+    passes.apply_remat(dag, remat.policy, params=params,
+                       scope=remat.scope_dict())
+    if before is not None:
+        from ..analysis.diagnostics import (AnalysisReport,
+                                            PlanVerificationError)
+        from ..analysis.equiv import (certify_equivalent,
+                                      dataflow_fingerprint_safe)
+        diags = certify_equivalent(
+            before, dataflow_fingerprint_safe(dag), "apply_remat")
+        if diags:
+            raise PlanVerificationError(AnalysisReport(
+                diagnostics=diags,
+                meta={"phase": "pass-boundary", "pass": "apply_remat"}))
+
+
 def compile_training(
     forward: Callable[[Recorder, dict], Any],
     params: dict[str, Any],
@@ -158,8 +187,7 @@ def compile_training(
     if build_bwd:
         build_backward(dag, split_backward=split_backward)
         if remat is not None and remat.policy != "full":
-            passes.apply_remat(dag, remat.policy, params=params,
-                               scope=remat.scope_dict())
+            _certified_remat(dag, remat, params)
 
     directives = strategy.lower(dag=dag)
     for directive in directives:

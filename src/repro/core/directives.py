@@ -289,7 +289,7 @@ class Split(Directive):
             n = dag.nodes[nid]
             if n.is_chunk or n.payload == "act":
                 n.out_specs = self._split_out_specs(n)
-        for i, e in enumerate(list(dag.edges)):
+        for e in list(dag.edges):
             if e.src in matched and e.dst in matched:
                 dag.edges.remove(e)
                 dag.edges.append(e.moved(

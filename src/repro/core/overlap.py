@@ -220,7 +220,8 @@ def _fuse_gather_run(dag: TrainingDAG, run: list[Node]) -> Node:
         name="all_gather:" + "+".join(buckets),
         dims=dict(first.dims), devices=first.devices, group=first.group,
         stream=first.stream, payload="param", out_specs=specs,
-        meta={"buckets": buckets, "fused": len(run)})
+        meta={"buckets": buckets, "fused": len(run),
+              "pass": "apply_overlap"})
     slot = 0
     member_ids = set()
     for n in run:
@@ -262,7 +263,8 @@ def _fuse_rs_run(dag: TrainingDAG, run: list[Node]) -> Node:
         dims=dict(first.dims), devices=first.devices, group=first.group,
         stream=first.stream, payload="grad", out_specs=specs,
         meta={"buckets": list(dict.fromkeys(buckets)),
-              "fused_members": members, "fused": len(run)})
+              "fused_members": members, "fused": len(run),
+              "pass": "apply_overlap"})
     member_ids = set()
     for i, n in enumerate(run):
         for e in list(dag.in_edges(n.id)):

@@ -106,7 +106,7 @@ def _chunk_in_avals(dag: TrainingDAG, nid: int, m: int):
     for e in dag.in_edges(nid):
         if 0 <= e.dst_in < m:
             specs[e.dst_in] = e.spec
-    for name, (spec, consumers) in dag.inputs.items():
+    for (spec, consumers) in dag.inputs.values():
         for (cnid, slot) in consumers:
             if cnid == nid and 0 <= slot < m:
                 specs[slot] = spec
@@ -197,6 +197,7 @@ def _stash_residuals(dag: TrainingDAG, fwd, bwd_ids: list[int],
     fwd.n_outputs = k + n_res
     fwd.out_specs = list(fwd.out_specs) + [
         ValueSpec(tuple(a.shape), str(a.dtype)) for a in res_avals]
+    fwd.meta["pass"] = "apply_remat"
     fwd.meta["n_res"] = n_res
     fwd.meta["static_out_slots"] = sorted(k + i for i in range(n_res)
                                           if i not in batch_scaled)
@@ -266,6 +267,7 @@ def _stash_residuals(dag: TrainingDAG, fwd, bwd_ids: list[int],
                          ValueSpec(tuple(a.shape), str(a.dtype)))
         bwd.meta["n_inputs"] = n_res + k
         bwd.meta["n_cots"] = k
+        bwd.meta["pass"] = "apply_remat"
         bwd.fn = make_stash_bwd(bwd.dims.get("PASS"))
     return True
 
@@ -322,7 +324,7 @@ def insert_p2p(dag: TrainingDAG) -> None:
             kind="comm", op="p2p", name=f"p2p:{src.name}->{dst.name}",
             dims=dict(dst.dims), devices=tuple(sd) + tuple(dd),
             stream=stream, payload="act", out_specs=[e.spec],
-            meta={"pairs": pairs,
+            meta={"pairs": pairs, "pass": "insert_p2p",
                   "origin": f"insert_p2p({src.name!r} -> {dst.name!r})"})
         dag.splice_comm_on_edge(e, comm)
         existing[key] = comm.id
@@ -353,6 +355,9 @@ def elide_allgathers(dag: TrainingDAG) -> None:
             continue
         dag.remove_node(g_dst)
         dst.meta["param_from_comm"] = g_src
+        # the surviving gather was rewritten in place (its buffer now
+        # lives across both consumers) — blame the pass in provenance
+        dag.nodes[g_src].meta["pass"] = "elide_allgathers"
         dag.meta.setdefault("elided_allgathers", 0)
         dag.meta["elided_allgathers"] += 1
 
@@ -373,7 +378,7 @@ def merge_grad_reduces(dag: TrainingDAG) -> None:
         for n in ars:
             by_part.setdefault(n.meta.get("part", 0), []).append(n)
         new_sinks = []
-        for part, group in sorted(by_part.items()):
+        for _part, group in sorted(by_part.items()):
             if len(group) <= 1:
                 if group:
                     new_sinks.append((group[0].id, 0))
@@ -388,6 +393,7 @@ def merge_grad_reduces(dag: TrainingDAG) -> None:
                 dag.remove_node(n.id)
             keep.meta["accumulated"] = True
             keep.meta["n_accumulated"] = len(group)
+            keep.meta["pass"] = "merge_grad_reduces"
             with dag.origin(f"merge_grad_reduces({bucket!r})"):
                 for p in producers:
                     if p != keep.id and p in dag.nodes:
@@ -457,13 +463,13 @@ def apply_offload(dag: TrainingDAG, payload: str = "act", depth: int = 2,
             dims=dict(dst.dims), devices=devices, group=devices,
             stream=f"{stream}#out", payload=payload, out_specs=[e.spec],
             meta={"offload": True, "offload_static": static,
-                  "origin": origin})
+                  "pass": "apply_offload", "origin": origin})
         h2d = dag.new_node(
             kind="comm", op="h2d", name=f"offload_in:{dst.name}",
             dims=dict(dst.dims), devices=devices, group=devices,
             stream=f"{stream}#in", payload=payload, out_specs=[e.spec],
             meta={"offload": True, "offload_static": static,
-                  "origin": origin})
+                  "pass": "apply_offload", "origin": origin})
         dag.edges.remove(e)
         dag.add_edge(e.src, e.src_out, d2h.id, 0, e.spec)
         dag.add_edge(d2h.id, 0, h2d.id, 0, e.spec)
@@ -503,9 +509,17 @@ def run_all(dag: TrainingDAG, overlap=None, offload=None) -> None:
     own boundary instead of three passes later.  Streams/devices are
     only fully assigned late in the pipeline, so the boundary check
     runs ``toposort`` + dangling-edge checks (the full ``validate``
-    still runs once at the end)."""
+    still runs once at the end).  On top of the structural checks, each
+    boundary **translation-validates** the pass: the DAG's dataflow
+    fingerprint (``repro.analysis.equiv``) is captured at entry and a
+    pass whose output fingerprints differently raises
+    ``PlanVerificationError`` with a PIPER026 diagnostic naming the
+    pass — fusion, elision, merging, offload splicing and transport
+    insertion are all fingerprint-invariant by construction, so any
+    drift is a real rewrite bug."""
     import os
     check = os.environ.get("REPRO_CHECK_PASSES", "") not in ("", "0")
+    ref_fp = [None]
 
     def boundary(pass_name: str) -> None:
         if not check:
@@ -523,6 +537,24 @@ def run_all(dag: TrainingDAG, overlap=None, offload=None) -> None:
             raise ValueError(
                 f"DAG invalid at pass boundary after {pass_name!r} "
                 f"(REPRO_CHECK_PASSES): {exc}") from exc
+        if ref_fp[0] is not None:
+            # function-local import: analysis imports core freely
+            from ..analysis.diagnostics import (AnalysisReport,
+                                                PlanVerificationError)
+            from ..analysis.equiv import (certify_equivalent,
+                                          dataflow_fingerprint_safe)
+            after = dataflow_fingerprint_safe(dag)
+            diags = certify_equivalent(ref_fp[0], after, pass_name)
+            if diags:
+                raise PlanVerificationError(AnalysisReport(
+                    diagnostics=diags,
+                    meta={"phase": "pass-boundary", "pass": pass_name}))
+            if after is not None:
+                ref_fp[0] = after
+
+    if check:
+        from ..analysis.equiv import dataflow_fingerprint_safe
+        ref_fp[0] = dataflow_fingerprint_safe(dag)
 
     assign_default_devices(dag)
     boundary("assign_default_devices")

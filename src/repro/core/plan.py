@@ -86,6 +86,16 @@ class GlobalPlan:
                       key=lambda t: (pos.get(t.node, len(pos)),
                                      role_rank.get(t.role, 9)))
 
+    def rank_signature(self, device: int, dag) -> dict:
+        """The typed communication interface of ``rank_program(device)``
+        — per-peer p2p send/recv specs and per-group collective
+        dispatch sequences.  Pairwise agreement of these signatures
+        across ranks is the MPMD-readiness condition; the analysis
+        layer checks it as PIPER025 (``repro.analysis.rank_signature``
+        is the implementation, delegated to keep core import-light)."""
+        from ..analysis.types import rank_signature
+        return rank_signature(dag, self, device)
+
     def summary(self) -> str:
         lines = []
         for d in sorted(self.device_plans):

@@ -667,6 +667,7 @@ class ElasticSupervisor:
             return None
 
         import dataclasses
+        import os
         new_pipe = dataclasses.replace(pipe, mb_split=effective)
         new_strategy = self.strategy.replacing(new_pipe).validate()
         key = new_strategy.to_json()
@@ -675,6 +676,29 @@ class ElasticSupervisor:
         if not cache_hit:
             self._compiled[key] = self.prog.recompile(
                 strategy=new_strategy)
+            # translation-validate the rebalance recompile: mb_split is
+            # scheduling metadata (which rank runs which microbatch), so
+            # the recompiled plan must carry the exact same dataflow as
+            # the plan it replaces — certified like any compiler pass
+            # (PIPER026) when pass checking is on.  Baseline is the
+            # program currently running this mesh (after a shrink or
+            # regrowth ``self.prog`` is the original-mesh build).
+            if os.environ.get("REPRO_CHECK_PASSES", "") not in ("", "0"):
+                from ..analysis import AnalysisReport, PlanVerificationError
+                from ..analysis.equiv import (certify_equivalent,
+                                              dataflow_fingerprint_safe)
+                running = self._compiled.get(self.strategy.to_json(),
+                                             self.prog)
+                diags = certify_equivalent(
+                    dataflow_fingerprint_safe(running.dag),
+                    dataflow_fingerprint_safe(self._compiled[key].dag),
+                    f"Pipeline(mb_split={effective})")
+                if diags:
+                    del self._compiled[key]
+                    raise PlanVerificationError(AnalysisReport(
+                        diagnostics=diags,
+                        meta={"phase": "rebalance-recompile",
+                              "step": step}))
         compile_seconds = 0.0 if cache_hit else time.time() - t_c
         self.strategy = new_strategy
         self._rb_last_step = step

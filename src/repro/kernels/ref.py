@@ -3,10 +3,5 @@ re-exported from the model layers, where the same functions serve as
 the CPU/compile-anywhere implementations)."""
 from ..models.attention import naive_attention  # noqa: F401
 from ..models.attention import _flash_fwd_impl, flash_attention_ref  # noqa: F401
+from ..models.layers import moe_gmm_ref  # noqa: F401
 from ..models.layers import rmsnorm_ref, ssm_scan_ref  # noqa: F401
-import jax.numpy as jnp
-
-
-def moe_gmm_ref(x, w):
-    """x: (E, cap, d), w: (E, d, f)."""
-    return jnp.einsum("ecd,edf->ecf", x, w)

@@ -1,8 +1,13 @@
-"""Static plan linter (DESIGN.md §15, docs/lint.md).
+"""Static plan linter (DESIGN.md §15–16, docs/lint.md).
 
 Runs the ``repro.analysis`` verifier on compiled plans without executing
 anything — deadlock, buffer-lifetime, stream-race and interface checks,
-reported as stable ``PIPER`` codes with directive provenance.
+plus (by default) the semantic layer: the shape/dtype/shard typechecker
+and the pairwise per-rank interface signatures.  ``lint --types`` is the
+MPMD-readiness gate: a plan whose per-rank interfaces typecheck pairwise
+can be split into per-rank programs with no global trace to cross-check.
+Everything is reported as stable ``PIPER`` codes with directive/pass
+provenance.
 
 Lint one strategy (the ``strategy.json`` artifact the autotuner and the
 train driver exchange) against a config's proxy model:
@@ -10,8 +15,9 @@ train driver exchange) against a config's proxy model:
   PYTHONPATH=src python -m repro.launch.lint \
       --strategy strategy.json --config qwen1.5-0.5b
 
-Lint the whole config x schedule x ZeRO grid (the CI ``tier1-lint``
-surface):
+Lint the whole config x schedule x ZeRO grid — now including the remat
+and offload memory-pass cells the translation validator certifies (the
+CI ``tier1-lint`` surface):
 
   PYTHONPATH=src python -m repro.launch.lint --grid --json --out lint.json
 
@@ -31,14 +37,24 @@ import time
 from repro.analysis import PlanVerificationError, analyze
 from repro.configs import ARCHS, get_config
 from repro.core.plan import ScheduleRejected
-from repro.core.strategy import Mesh, Pipeline, Strategy, StrategyError, ZeRO
+from repro.core.strategy import (Mesh, Offload, Pipeline, Remat, Strategy,
+                                 StrategyError, ZeRO)
 from repro.tune import build_strategy_program
 
 GRID_SCHEDULES = ("1f1b", "gpipe", "dualpipev")
 GRID_ZERO = (0, 3)
+# the memory-pass cells: remat residual stashing and host offload are
+# exactly the rewrites the PIPER026 translation validator certifies, so
+# the lint grid must exercise them (ISSUE 9 satellite)
+GRID_MEMORY = (
+    {"schedule": "1f1b", "zero": 3, "remat": "none", "offload": False},
+    {"schedule": "dualpipev", "zero": 3, "remat": "none", "offload": False},
+    {"schedule": "1f1b", "zero": 3, "remat": "none", "offload": True},
+)
 
 
-def lint_cell(cfg, strategy: Strategy, tokens: int, depth: str) -> dict:
+def lint_cell(cfg, strategy: Strategy, tokens: int, depth: str,
+              types: bool = True) -> dict:
     """Compile one (config, strategy) cell and analyze it.  A plan the
     compiler's own embedded quick verification rejects still yields a
     structured report (the exception carries it); only strategy/schedule
@@ -54,7 +70,7 @@ def lint_cell(cfg, strategy: Strategy, tokens: int, depth: str) -> dict:
                 "codes": [], "diagnostics": [],
                 "seconds": round(time.time() - t0, 3)}
     if prog is not None:
-        report = analyze(prog, depth=depth)
+        report = analyze(prog, depth=depth, types=types)
     return {"ok": report.ok,
             "codes": sorted(set(report.codes())),
             "diagnostics": [d.to_dict() for d in report.diagnostics],
@@ -62,23 +78,38 @@ def lint_cell(cfg, strategy: Strategy, tokens: int, depth: str) -> dict:
             "seconds": round(time.time() - t0, 3)}
 
 
-def _grid_strategy(sched: str, zero: int, n_mb: int) -> Strategy:
-    return Strategy(Mesh(pp=2, dp=2),
-                    Pipeline(sched, n_mb=n_mb) | ZeRO(stage=zero))
+def _grid_strategy(sched: str, zero: int, n_mb: int,
+                   remat: str = "full", offload: bool = False) -> Strategy:
+    frags = Pipeline(sched, n_mb=n_mb) | ZeRO(stage=zero)
+    if remat != "full":
+        frags = frags | Remat(remat)
+    if offload:
+        frags = frags | Offload(depth=2)
+    return Strategy(Mesh(pp=2, dp=2), frags)
 
 
 def run_grid(depth: str, tokens: int, n_mb: int,
-             archs=None) -> dict:
+             archs=None, types: bool = True) -> dict:
     cells = []
     for name in (archs or ARCHS):
         cfg = get_config(name).reduced()
         for sched in GRID_SCHEDULES:
             for zero in GRID_ZERO:
                 cell = lint_cell(cfg, _grid_strategy(sched, zero, n_mb),
-                                 tokens, depth)
-                cell.update(config=name, schedule=sched, zero=zero)
+                                 tokens, depth, types=types)
+                cell.update(config=name, schedule=sched, zero=zero,
+                            remat="full", offload=False)
                 cells.append(cell)
+        for mem in GRID_MEMORY:
+            cell = lint_cell(
+                cfg, _grid_strategy(mem["schedule"], mem["zero"], n_mb,
+                                    remat=mem["remat"],
+                                    offload=mem["offload"]),
+                tokens, depth, types=types)
+            cell.update(config=name, **mem)
+            cells.append(cell)
     return {"depth": depth,
+            "types": types,
             "ok": all(c["ok"] for c in cells),
             "compile_errors": sum(1 for c in cells
                                   if c.get("compile_error")),
@@ -86,8 +117,8 @@ def run_grid(depth: str, tokens: int, n_mb: int,
 
 
 def _format_cell_text(cell: dict) -> str:
-    tag = " ".join(f"{k}={cell[k]}" for k in ("config", "schedule", "zero")
-                   if k in cell)
+    keys = ("config", "schedule", "zero", "remat", "offload")
+    tag = " ".join(f"{k}={cell[k]}" for k in keys if k in cell)
     if cell.get("compile_error"):
         return f"COMPILE-ERROR [{tag}] {cell['compile_error']}"
     if cell["ok"] and not cell["diagnostics"]:
@@ -110,12 +141,19 @@ def main(argv=None) -> int:
                     help="architecture the strategy compiles against "
                          f"(one of {', '.join(ARCHS)})")
     ap.add_argument("--grid", action="store_true",
-                    help="lint the full config x schedule x ZeRO grid")
+                    help="lint the full config x schedule x ZeRO grid "
+                         "plus the remat/offload memory cells")
     ap.add_argument("--arch", action="append", dest="archs",
                     help="restrict --grid to these configs (repeatable)")
     ap.add_argument("--depth", choices=("quick", "deep"), default="deep",
                     help="verifier depth (default: deep — the abstract "
                          "executor replay)")
+    ap.add_argument("--types", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the semantic layer: shape/dtype/shard "
+                         "typechecker + pairwise per-rank interface "
+                         "signatures, the MPMD-readiness gate "
+                         "(default: on; --no-types disables)")
     ap.add_argument("--tokens", type=int, default=64,
                     help="proxy tokens per microbatch batch dim")
     ap.add_argument("--n-mb", type=int, default=4,
@@ -131,7 +169,7 @@ def main(argv=None) -> int:
 
     if args.grid:
         result = run_grid(args.depth, args.tokens, args.n_mb,
-                          archs=args.archs)
+                          archs=args.archs, types=args.types)
         cells = result["cells"]
     else:
         try:
@@ -140,10 +178,12 @@ def main(argv=None) -> int:
             print(f"COMPILE-ERROR [strategy={args.strategy}] {exc}")
             return 2
         cfg = get_config(args.config).reduced()
-        cell = lint_cell(cfg, strategy, args.tokens, args.depth)
+        cell = lint_cell(cfg, strategy, args.tokens, args.depth,
+                         types=args.types)
         cell.update(config=args.config,
                     strategy=str(args.strategy))
-        result = {"depth": args.depth, "ok": cell["ok"],
+        result = {"depth": args.depth, "types": args.types,
+                  "ok": cell["ok"],
                   "compile_errors": int(bool(cell.get("compile_error"))),
                   "cells": [cell]}
         cells = [cell]

@@ -33,7 +33,6 @@ SHAPES = {
 
 def cell_status(cfg: ArchConfig, shape_name: str) -> str:
     """'ok' or the skip reason for this (arch, shape) cell."""
-    info = SHAPES[shape_name]
     if shape_name == "long_500k" and not cfg.subquadratic:
         return "skipped(full-attention)"
     return "ok"

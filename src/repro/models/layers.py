@@ -116,10 +116,8 @@ def apply_mrope(x: jax.Array, positions: jax.Array, sections=(16, 24, 24),
     freqs = rope_freqs(d, theta)                       # (half,)
     # section index for each rotary dim
     sec_pos = []
-    start = 0
     for si, sec in enumerate(sections):
         sec_pos.extend([si] * sec)
-        start += sec
     sec_idx = jnp.array(sec_pos)                       # (half,)
     pos = positions.astype(jnp.float32)                # (3, B, S)
     # choose, per rotary dim, the position stream of its section
@@ -277,16 +275,20 @@ def init_moe(key, d_model: int, d_expert: int, n_experts: int,
     return p
 
 
+def moe_gmm_ref(x, w):
+    """Grouped matmul reference: x (E, cap, d) @ w (E, d, f)."""
+    return jnp.einsum("ecd,edf->ecf", x, w)
+
+
 def moe_expert_mm(x_e, p, act: str):
     """Expert computation on pre-dispatched tokens.
     x_e: (E, cap, d_model) -> (E, cap, d_model)."""
-    gmm = get_impl("moe_gmm", None)
+    gmm = get_impl("moe_gmm", moe_gmm_ref)
     if act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, p["we_gate"])) * \
-            jnp.einsum("ecd,edf->ecf", x_e, p["we_up"])
+        h = jax.nn.silu(gmm(x_e, p["we_gate"])) * gmm(x_e, p["we_up"])
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x_e, p["we_up"]))
-    return jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+        h = jax.nn.gelu(gmm(x_e, p["we_up"]))
+    return gmm(h, p["we_down"])
 
 
 def _router(p, xt, top_k):

@@ -490,8 +490,6 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
     cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
     if cfg.ssm and not cfg.hybrid_every:
         di = cfg.ssm.expand * cfg.d_model
-        nstate = (cfg.ssm.state if cfg.ssm.version == 1
-                  else cfg.ssm.state)
         if cfg.ssm.version == 1:
             ssm_shape = (cfg.n_layers, batch, di, cfg.ssm.state)
         else:
@@ -549,7 +547,6 @@ def prefill(cfg: ArchConfig, p: dict, batch: dict, max_seq: int):
 
 def decode_step(cfg: ArchConfig, p: dict, token: jax.Array, cache: dict):
     """One decode step. token: (B, 1) int32.  Returns (logits, cache)."""
-    b = token.shape[0]
     x = p["embed"][token]                              # (B,1,D)
     pos = cache["len"]
 

@@ -90,7 +90,7 @@ class Interpreter:
         self._cons0 = self._consumer_counts()
         self._feed_name: dict[tuple[int, int], str] = {}
         self._feed_left0: dict[tuple[str, int], int] = {}
-        for name, (spec, consumers) in self.dag.inputs.items():
+        for name, (_spec, consumers) in self.dag.inputs.items():
             for (nid, slot) in consumers:
                 self._feed_name[(nid, slot)] = name
                 for d in self.dag.nodes[nid].devices:
@@ -242,7 +242,6 @@ class Interpreter:
     def _consumer_counts(self) -> dict[tuple[int, int, int], int]:
         cons: dict[tuple[int, int, int], int] = {}
         for e in self.dag.edges:
-            dst = self.dag.nodes[e.dst]
             for t_dev in self._value_devices(e.dst):
                 cons[(e.src, e.src_out, t_dev)] = cons.get(
                     (e.src, e.src_out, t_dev), 0) + 1
@@ -262,7 +261,7 @@ class Interpreter:
         mb_meta = self.dag.meta.get("microbatch_inputs", {})
         # build values per (possibly microbatched) input name
         values: dict[str, Any] = {}
-        for name, (spec, consumers) in self.dag.inputs.items():
+        for name in self.dag.inputs:
             if name in batch:
                 values[name] = batch[name]
         for base, info in mb_meta.items():
@@ -276,7 +275,7 @@ class Interpreter:
             parts = jnp.split(arr, k, axis=0)
             for i, sub in enumerate(info["names"]):
                 values[sub] = parts[i]
-        for name, (spec, consumers) in self.dag.inputs.items():
+        for name, (_spec, consumers) in self.dag.inputs.items():
             if name not in values:
                 raise KeyError(f"missing batch input {name!r}")
             arr = values[name]

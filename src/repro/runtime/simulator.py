@@ -126,7 +126,7 @@ class TimelineSimulator:
             if 0 <= e.dst_in < m:
                 specs[e.dst_in] = jax.ShapeDtypeStruct(
                     e.spec.shape, e.spec.dtype)
-        for name, (spec, consumers) in self.dag.inputs.items():
+        for (spec, consumers) in self.dag.inputs.values():
             for (nid, slot) in consumers:
                 if nid == node.id and 0 <= slot < m:
                     shape = spec.shape

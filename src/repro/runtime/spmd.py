@@ -311,7 +311,7 @@ class SpmdExecutor:
         # first-occurrence node trace order from the replayed dispatch
         trace_order: list[int] = []
         seen: set[int] = set()
-        for (nid, dev, role) in replay.exec_order:
+        for (nid, _dev, role) in replay.exec_order:
             if role == ROLE_SEND or nid in seen:
                 continue
             seen.add(nid)

@@ -89,7 +89,7 @@ class TestCleanPlans:
 # ---------------------------------------------------------------------------
 
 def drop_one_recv(plan):
-    for d, dp in sorted(plan.device_plans.items()):
+    for _d, dp in sorted(plan.device_plans.items()):
         for key in list(dp.tasks):
             if key[2] == "recv":
                 del dp.tasks[key]
@@ -298,7 +298,10 @@ class TestIntegration:
             passes.run_all(dag)
 
     def test_diagnostic_codes_are_stable(self):
-        assert set(CODES) == {f"PIPER{i:03d}" for i in range(1, 12)}
+        # PR 8's scheduling layer (001-011) plus PR 9's semantic layer
+        # (020-026); released codes never change meaning
+        assert set(CODES) == ({f"PIPER{i:03d}" for i in range(1, 12)}
+                              | {f"PIPER{i:03d}" for i in range(20, 27)})
 
 
 # ---------------------------------------------------------------------------
@@ -313,8 +316,14 @@ class TestLintCLI:
                    "--json", "--out", str(out)])
         assert rc == 0
         result = json.loads(out.read_text())
-        assert result["ok"] and len(result["cells"]) == 6
+        # 6 schedule x ZeRO cells + 3 remat/offload memory cells
+        assert result["ok"] and len(result["cells"]) == 9
         assert all(c["codes"] == [] for c in result["cells"])
+        assert sum(1 for c in result["cells"]
+                   if c["remat"] == "none") == 3
+        assert sum(1 for c in result["cells"] if c["offload"]) == 1
+        # the semantic layer (typechecker + rank signatures) ran
+        assert all(c["meta"]["types"] for c in result["cells"])
         assert json.loads(capsys.readouterr().out)["ok"]
 
     def test_strategy_file_lints_clean(self, tmp_path, capsys):

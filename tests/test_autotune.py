@@ -15,8 +15,8 @@ TOKENS = 8192
 SPACE = tune.SearchSpace(mb_multipliers=(2, 4))
 
 
-def small_search(name="qwen3-1b", mesh=tune.MeshSpec(pp=2, dp=1),
-                 budget=None, **kw):
+def small_search(name="qwen3-1b", mesh=None, budget=None, **kw):
+    mesh = mesh or tune.MeshSpec(pp=2, dp=1)
     kw.setdefault("tokens", TOKENS)
     kw.setdefault("space", SPACE)
     kw.setdefault("use_cache", False)

@@ -1,0 +1,344 @@
+"""Semantic certifier (repro.analysis.types / equiv, DESIGN.md §16).
+
+- clean plans across schedules x ZeRO x remat typecheck with zero
+  diagnostics — the semantic layer is exact, not heuristic;
+- golden hand-mutated plans each produce their exact PIPER02x code:
+  dtype flip on an edge (PIPER020), dropped remat stash edge
+  (PIPER021), wrong gather group (PIPER022), corrupted fused-gather
+  member spec (PIPER023), lost microbatch token / non-conserving
+  mb_split (PIPER024), mismatched p2p specs in a hand-edited rank
+  program (PIPER025);
+- the dataflow fingerprint is invariant across every certified rewrite
+  (remat full/none, overlap on/off, offload on/off, mb_split) and a
+  corrupted pass is rejected at its own ``run_all`` boundary with
+  PIPER026 under REPRO_CHECK_PASSES=1 (on suite-wide via conftest);
+- ``GlobalPlan.rank_signature`` extracts per-rank typed interfaces and
+  the pairwise check (the MPMD-readiness gate) holds on clean plans.
+"""
+import copy
+
+import jax
+import pytest
+from helpers import inputs_spec, make_mlp_forward, make_mlp_params
+
+from repro.analysis import (PlanVerificationError, analyze,
+                            certify_equivalent, dataflow_fingerprint,
+                            rank_interface_diagnostics, rank_signature,
+                            typecheck)
+from repro.core import passes
+from repro.core.compiler import compile_training
+from repro.core.dag import ValueSpec
+from repro.core.strategy import (Mesh, Offload, Overlap, Pipeline, Remat,
+                                 Strategy, ZeRO)
+
+S, D, BATCH = 4, 16, 8
+
+SEMANTIC_CODES = {f"PIPER{i:03d}" for i in range(20, 27)}
+
+
+def compile_mlp(sched="1f1b", zero=3, n_mb=4, overlap=False, remat=None,
+                offload=False, mb_split=None, **kw):
+    frags = Pipeline(sched, n_mb=n_mb, mb_split=mb_split) | ZeRO(stage=zero)
+    if overlap:
+        frags = frags | Overlap(prefetch=2, bucket_mb=64)
+    if remat is not None:
+        frags = frags | Remat(remat)
+    if offload:
+        frags = frags | Offload(depth=1)
+    params = make_mlp_params(jax.random.PRNGKey(0), S, D)
+    return compile_training(make_mlp_forward(S), params,
+                            inputs_spec(BATCH, D),
+                            strategy=Strategy(Mesh(pp=2, dp=2), frags),
+                            **kw)
+
+
+# ---------------------------------------------------------------------------
+# clean plans: the typechecker is exact
+# ---------------------------------------------------------------------------
+
+class TestCleanPlans:
+    @pytest.mark.parametrize("sched", ["1f1b", "gpipe", "dualpipev"])
+    @pytest.mark.parametrize("zero", [0, 3])
+    @pytest.mark.parametrize("remat", [None, "none"])
+    def test_grid_typechecks_clean(self, sched, zero, remat):
+        prog = compile_mlp(sched, zero, remat=remat)
+        report = analyze(prog, depth="quick")
+        assert report.ok, report.format_text()
+        assert not (set(report.codes()) & SEMANTIC_CODES)
+        assert report.meta["types"] is True
+
+    def test_overlap_offload_plan_typechecks_clean(self):
+        prog = compile_mlp(overlap=True, remat="none", offload=True)
+        report = analyze(prog, depth="quick")
+        assert report.ok, report.format_text()
+        assert typecheck(prog.dag) == []
+        assert rank_interface_diagnostics(prog.dag, prog.plan) == []
+
+    def test_types_flag_off_skips_semantic_layer(self):
+        prog = compile_mlp()
+        report = analyze(prog, depth="quick", types=False)
+        assert report.meta["types"] is False
+        # corrupting an edge dtype goes unseen only when types=False
+        mut = copy.deepcopy(prog)
+        _flip_edge_dtype(mut.dag)
+        assert "PIPER020" not in analyze(mut, types=False).codes()
+        assert "PIPER020" in analyze(mut).codes()
+
+
+# ---------------------------------------------------------------------------
+# golden mutations — one exact code each
+# ---------------------------------------------------------------------------
+
+def _flip_edge_dtype(dag):
+    for e in dag.edges:
+        src, dst = dag.nodes.get(e.src), dag.nodes.get(e.dst)
+        if (e.dst_in >= 0 and src is not None and dst is not None
+                and src.is_chunk and dst.is_chunk):
+            dag.edges.remove(e)
+            dag.edges.append(e.moved(spec=ValueSpec(e.spec.shape,
+                                                    "bfloat16")))
+            return e
+    raise AssertionError("no chunk-to-chunk data edge found")
+
+
+class TestGoldenMutations:
+    def test_dtype_flip_on_edge_is_piper020(self):
+        mut = copy.deepcopy(compile_mlp())
+        e = _flip_edge_dtype(mut.dag)
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER020")
+        assert d, report.format_text()
+        assert e.src in d[0].nodes and e.dst in d[0].nodes
+        assert "bfloat16" in d[0].message
+
+    def test_dropped_remat_stash_edge_is_piper021(self):
+        mut = copy.deepcopy(compile_mlp(remat="none"))
+        dag = mut.dag
+        stash = None
+        for e in dag.edges:
+            src = dag.nodes.get(e.src)
+            dst = dag.nodes.get(e.dst)
+            if (src is not None and dst is not None and src.is_chunk
+                    and src.meta.get("n_res")
+                    and dst.is_chunk
+                    and dst.dims.get("PASS") in ("B", "Bi", "Bw")
+                    and 0 <= e.dst_in < dst.meta.get("n_inputs", 0)
+                    - dst.meta.get("n_cots", 0)):
+                stash = e
+                break
+        assert stash is not None, "no remat stash edge found"
+        dag.edges.remove(stash)
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER021")
+        assert d, report.format_text()
+        hit = [x for x in d if stash.dst in x.nodes]
+        assert hit and "unfed" in hit[0].message
+        # provenance names the rewriting pass
+        assert any("pass:apply_remat" in p
+                   for x in hit for p in x.provenance)
+
+    def test_wrong_gather_group_is_piper022(self):
+        mut = copy.deepcopy(compile_mlp(zero=3))
+        gather = next(n for n in mut.dag.comms()
+                      if n.op == "all_gather" and n.payload == "param")
+        gather.group = (gather.group[0],)
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER022")
+        assert d, report.format_text()
+        assert gather.id in d[0].nodes
+        assert "replica group" in d[0].message
+        # blames the ZeRO directive that introduced the gather
+        assert any("ZeRO" in p for p in d[0].provenance)
+
+    def test_corrupt_fused_gather_member_is_piper023(self):
+        mut = copy.deepcopy(compile_mlp(zero=3, overlap=True))
+        fused = [n for n in mut.dag.comms()
+                 if n.op == "all_gather" and n.meta.get("fused")]
+        assert fused, "overlap engine fused no gathers"
+        n = fused[0]
+        # wrong member size after fusion: slot typed at shard size
+        shard = ValueSpec((max(n.out_specs[0].shape[0] // 2, 1),),
+                          n.out_specs[0].dtype)
+        n.out_specs[0] = shard
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER023")
+        assert d, report.format_text()
+        assert n.id in d[0].nodes
+        # provenance blames the fusing pass
+        assert any("pass:apply_overlap" in p for p in d[0].provenance)
+
+    def test_lost_microbatch_token_is_piper024(self):
+        mut = copy.deepcopy(compile_mlp())
+        dag = mut.dag
+        mb = dag.meta["microbatch_inputs"]
+        base, info = next(iter(mb.items()))
+        victim = info["names"][-1]
+        del dag.inputs[victim]
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER024")
+        assert d, report.format_text()
+        assert victim in d[0].message
+        assert d[0].details["base"] == base
+
+    def test_non_conserving_mb_split_is_piper024(self):
+        mut = copy.deepcopy(compile_mlp(n_mb=4))
+        mut.dag.meta["mb_split"] = {0: 2, 1: 1}   # sums to 3, not 4
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER024")
+        assert d, report.format_text()
+        assert "re-assigns microbatches" in d[0].message
+
+    def test_mismatched_p2p_specs_is_piper025(self):
+        mut = copy.deepcopy(compile_mlp())
+        dag = mut.dag
+        p2p = next(n for n in dag.comms() if n.op == "p2p")
+        # hand-edit the receiving rank's program: its consumers now
+        # expect a different dtype than the sender supplies
+        for e in list(dag.edges):
+            if e.src == p2p.id and e.dst_in >= 0:
+                dag.edges.remove(e)
+                dag.edges.append(e.moved(spec=ValueSpec(e.spec.shape,
+                                                        "bfloat16")))
+        report = analyze(mut, depth="quick")
+        d = report.by_code("PIPER025")
+        assert d, report.format_text()
+        assert "p2p interface mismatch" in d[0].message
+        assert "bfloat16" in d[0].message
+
+
+# ---------------------------------------------------------------------------
+# translation validation (PIPER026)
+# ---------------------------------------------------------------------------
+
+class TestTranslationValidation:
+    def test_fingerprint_invariant_across_remat(self):
+        a = dataflow_fingerprint(compile_mlp(remat=None).dag)
+        b = dataflow_fingerprint(compile_mlp(remat="none").dag)
+        assert a == b and a.digest() == b.digest()
+
+    def test_fingerprint_invariant_across_overlap_and_offload(self):
+        a = dataflow_fingerprint(compile_mlp(remat="none").dag)
+        b = dataflow_fingerprint(
+            compile_mlp(remat="none", overlap=True, offload=True).dag)
+        assert a == b
+
+    def test_fingerprint_invariant_across_mb_split(self):
+        a = dataflow_fingerprint(compile_mlp().dag)
+        b = dataflow_fingerprint(compile_mlp(mb_split={0: 3, 1: 1}).dag)
+        assert a == b
+
+    def test_schedules_share_dataflow_but_zero_stages_do_not(self):
+        f1 = dataflow_fingerprint(compile_mlp("1f1b", 3).dag)
+        fg = dataflow_fingerprint(compile_mlp("gpipe", 3).dag)
+        f0 = dataflow_fingerprint(compile_mlp("1f1b", 0).dag)
+        assert f1 == fg           # scheduling-independent by design
+        assert f1 != f0           # ZeRO-3 changes the reduction op
+
+    def test_certify_reports_piper026_with_the_pass_name(self):
+        prog = compile_mlp()
+        before = dataflow_fingerprint(prog.dag)
+        mut = copy.deepcopy(prog)
+        victim = next(n for n in mut.dag.chunks()
+                      if n.dims.get("PASS") == "F")
+        victim.name = victim.name + "_corrupted"
+        after = dataflow_fingerprint(mut.dag)
+        diags = certify_equivalent(before, after, "elide_allgathers")
+        assert len(diags) == 1
+        d = diags[0]
+        assert d.code == "PIPER026"
+        assert "elide_allgathers" in d.message
+        assert d.details["pass"] == "elide_allgathers"
+        assert d.details["diff"]
+        assert certify_equivalent(before, before, "noop") == []
+
+    def test_corrupted_pass_rejected_at_its_boundary(self, monkeypatch):
+        # a pass that silently rewrites a chunk's identity must be
+        # rejected at ITS boundary by run_all's translation validation
+        real = passes.elide_allgathers
+
+        def corrupting(dag):
+            real(dag)
+            victim = next(n for n in dag.chunks()
+                          if n.dims.get("PASS") == "F")
+            victim.name = victim.name + "_oops"
+
+        monkeypatch.setattr(passes, "elide_allgathers", corrupting)
+        monkeypatch.setenv("REPRO_CHECK_PASSES", "1")
+        with pytest.raises(PlanVerificationError) as exc:
+            compile_mlp()
+        report = exc.value.report
+        assert report.codes() == ["PIPER026"]
+        assert report.meta["pass"] == "elide_allgathers"
+        assert "elide_allgathers" in report.diagnostics[0].message
+
+    def test_whole_pipeline_compiles_under_check_passes(self, monkeypatch):
+        # the acceptance bar: every certified pass, all at once, under
+        # pass-boundary translation validation
+        monkeypatch.setenv("REPRO_CHECK_PASSES", "1")
+        prog = compile_mlp(remat="none", overlap=True, offload=True,
+                           mb_split={0: 3, 1: 1})
+        assert analyze(prog, depth="deep").ok
+
+
+# ---------------------------------------------------------------------------
+# per-rank interface signatures (MPMD readiness)
+# ---------------------------------------------------------------------------
+
+class TestRankSignatures:
+    def test_signatures_pair_up_across_ranks(self):
+        prog = compile_mlp()
+        sigs = {d: rank_signature(prog.dag, prog.plan, d)
+                for d in prog.plan.devices}
+        sends = sum(len(s["sends"]) for s in sigs.values())
+        recvs = sum(len(s["recvs"]) for s in sigs.values())
+        assert sends == recvs > 0
+        for d, sig in sigs.items():
+            for (peer, _nid, spec) in sig["sends"]:
+                assert spec is not None
+                assert any(p == d and s == spec
+                           for (p, _n, s) in sigs[peer]["recvs"])
+        assert rank_interface_diagnostics(prog.dag, prog.plan) == []
+
+    def test_collective_sequences_agree_groupwise(self):
+        prog = compile_mlp(zero=3, overlap=True)
+        sigs = {d: rank_signature(prog.dag, prog.plan, d)
+                for d in prog.plan.devices}
+        by_group = {}
+        for d, sig in sigs.items():
+            for (group, nid, op, payload, specs) in sig["collectives"]:
+                by_group.setdefault(group, {}).setdefault(d, []).append(
+                    (nid, op, payload, specs))
+        for group, per_rank in by_group.items():
+            seqs = [per_rank.get(r, []) for r in group]
+            assert all(s == seqs[0] for s in seqs[1:])
+
+    def test_plan_method_delegates(self):
+        prog = compile_mlp()
+        d = prog.plan.devices[0]
+        assert prog.plan.rank_signature(d, prog.dag) == \
+            rank_signature(prog.dag, prog.plan, d)
+
+
+# ---------------------------------------------------------------------------
+# pass provenance rendering
+# ---------------------------------------------------------------------------
+
+class TestPassProvenance:
+    def test_pass_inserted_nodes_render_their_pass(self):
+        from repro.analysis import node_provenance
+        prog = compile_mlp(remat="none", overlap=True, offload=True)
+        dag = prog.dag
+        rendered = {node_provenance(dag, nid) for nid in dag.nodes}
+        assert any("pass:apply_offload" in r for r in rendered)
+        assert any("pass:apply_overlap" in r for r in rendered)
+        assert any("pass:apply_remat" in r for r in rendered)
+        assert any("insert_p2p" in r for r in rendered)
+
+    def test_merged_reduce_renders_merge_pass(self):
+        from repro.analysis import node_provenance
+        prog = compile_mlp(zero=0)   # unsharded grads -> merged reduces
+        dag = prog.dag
+        merged = [n for n in dag.comms() if n.meta.get("accumulated")]
+        assert merged
+        assert "pass:merge_grad_reduces" in node_provenance(
+            dag, merged[0].id)
