@@ -55,15 +55,14 @@ def _run_scenario(name: str, schedule) -> dict:
     from repro.checkpoint import CheckpointManager
     from repro.data import SyntheticVectorSource, VectorLoader
     from repro.ft import ChaosInjector, ElasticSupervisor
-    from repro.runtime.spmd import SpmdExecutor
+    from repro.runtime.executor import executor_factory
 
     from .common import D, build_pp_program
 
     prog, params = build_pp_program("1f1b", PP, MB, BATCH,
                                     dp_per_rank=DP, zero=3, d=D)
 
-    def factory(p, prm, devices):
-        return SpmdExecutor(p, params=prm, physical_devices=devices)
+    factory = executor_factory("spmd")
 
     with tempfile.TemporaryDirectory() as td:
         loader = VectorLoader(SyntheticVectorSource(D, seed=11),

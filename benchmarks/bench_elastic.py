@@ -48,15 +48,14 @@ def _run_cell(kind: str, zero: int, *, prewarm: bool) -> dict:
     from repro.checkpoint import CheckpointManager
     from repro.data import SyntheticVectorSource, VectorLoader
     from repro.ft import ElasticSupervisor, RankFailureInjector
-    from repro.runtime.spmd import SpmdExecutor
+    from repro.runtime.executor import executor_factory
 
     from .common import D, build_pp_program
 
     prog, params = build_pp_program(kind, PP, MB, BATCH,
                                     dp_per_rank=DP, zero=zero, d=D)
 
-    def factory(p, prm, devices):
-        return SpmdExecutor(p, params=prm, physical_devices=devices)
+    factory = executor_factory("spmd")
 
     with tempfile.TemporaryDirectory() as td:
         loader = VectorLoader(SyntheticVectorSource(D, seed=11),

@@ -45,9 +45,9 @@ def main(argv=None) -> None:
         return
 
     from . import (bench_chaos, bench_elastic, bench_kernels,
-                   bench_overlap, bench_parity, bench_pp_schedules,
-                   bench_pp_zero, bench_remat, bench_scaling,
-                   bench_spmd_parity)
+                   bench_mpmd_parity, bench_overlap, bench_parity,
+                   bench_pp_schedules, bench_pp_zero, bench_remat,
+                   bench_scaling, bench_spmd_parity)
     sections = [
         ("Fig7: PP x EP schedules (1F1B/interleaved/DualPipeV)",
          bench_pp_schedules.main),
@@ -57,6 +57,8 @@ def main(argv=None) -> None:
          bench_remat.main),
         ("PR5: SPMD executor measured-vs-predicted + bit-parity",
          bench_spmd_parity.main),
+        ("PR10: MPMD executor measured-vs-predicted + trace economics",
+         bench_mpmd_parity.main),
         ("PR6: elastic recovery steps-lost / wall-time grid",
          bench_elastic.main),
         ("PR7: chaos soak — fault-schedule recovery accounting",

@@ -215,10 +215,12 @@ class ElasticSupervisor:
     rebuilds the runner on the surviving physical devices.
 
     ``runner_factory(prog, params, physical_devices)`` builds the
-    executor — ``runtime.spmd.SpmdExecutor`` in real runs, the
-    ``Interpreter`` in fast tests (which may ignore
-    ``physical_devices``).  The runner contract: ``run(batch)`` returns
-    an object with ``.loss`` and ``.grads``, and assigning
+    executor.  ``runtime.executor.executor_factory(name)`` produces a
+    factory in exactly this shape for any registered backend —
+    ``"spmd"``/``"mpmd"`` in real runs, ``"reference"`` in fast tests
+    (the interpreter ignores ``physical_devices``).  The runner
+    contract is the registry's ``Executor`` protocol: ``run(batch)``
+    returns an object with ``.loss`` and ``.grads``, and assigning
     ``runner.params`` swaps weights without retracing.
     """
 

@@ -11,13 +11,13 @@ import numpy as np
 
 from ..models import ArchConfig, decode_step, prefill, train_loss
 from ..optim import adamw_update
-from ..parallel.sharding import (Strategy, batch_shardings,
+from ..parallel.sharding import (ShardingRules, batch_shardings,
                                  cache_shardings, opt_state_shardings,
                                  params_shardings)
 from .specs import batch_specs, cache_specs, params_specs, state_specs
 
 
-def _logits_sharding(mesh: Mesh, strat: Strategy, batch: int):
+def _logits_sharding(mesh: Mesh, strat: ShardingRules, batch: int):
     ax = strat.dp_axes if len(strat.dp_axes) > 1 else strat.dp_axes[0]
     size = int(np.prod([mesh.shape[a] for a in
                         (ax if isinstance(ax, tuple) else (ax,))]))
@@ -27,7 +27,7 @@ def _logits_sharding(mesh: Mesh, strat: Strategy, batch: int):
 
 
 def strategy_for(mesh: Mesh, zero_stage: int = 3, core=None,
-                 **kw) -> Strategy:
+                 **kw) -> ShardingRules:
     """The pjit step builders' sharding rules, derived from ONE source
     of truth: a first-class ``core.strategy.Strategy``.  Pass ``core=``
     to drive the lowering from a declarative strategy document (the
@@ -44,7 +44,7 @@ def strategy_for(mesh: Mesh, zero_stage: int = 3, core=None,
         # one leaves the caller's zero_stage in force (the pre-unified
         # behavior dryrun's --zero help documents)
         kw.setdefault("zero_stage", zero_stage)
-    return Strategy.from_core(core, mesh, **kw)
+    return ShardingRules.from_core(core, mesh, **kw)
 
 
 def make_train_fn(cfg: ArchConfig, lr: float = 3e-4):
@@ -72,7 +72,7 @@ def make_decode_fn(cfg: ArchConfig):
     return step
 
 
-def jit_train_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
+def jit_train_step(cfg: ArchConfig, mesh: Mesh, strat: ShardingRules,
                    shape_name: str = "train_4k"):
     """Returns (jitted_fn, (state_avals, batch_avals))."""
     state_avals = state_specs(cfg)
@@ -93,7 +93,7 @@ def jit_train_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
     return fn, (state_avals, batch_avals)
 
 
-def jit_prefill_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
+def jit_prefill_step(cfg: ArchConfig, mesh: Mesh, strat: ShardingRules,
                      shape_name: str = "prefill_32k"):
     from .specs import SHAPES
     seq = SHAPES[shape_name]["seq"]
@@ -112,7 +112,7 @@ def jit_prefill_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
     return fn, (p_avals, batch_avals)
 
 
-def jit_decode_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
+def jit_decode_step(cfg: ArchConfig, mesh: Mesh, strat: ShardingRules,
                     shape_name: str = "decode_32k"):
     p_avals = params_specs(cfg)
     cache_avals = cache_specs(cfg, shape_name)
@@ -129,7 +129,7 @@ def jit_decode_step(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
     return fn, (p_avals, cache_avals, batch_avals)
 
 
-def axis_map_for(strat: Strategy) -> dict:
+def axis_map_for(strat: ShardingRules) -> dict:
     dp = strat.dp_axes if len(strat.dp_axes) > 1 else strat.dp_axes[0]
     dpt = tuple(strat.dp_axes) + (strat.tp_axis,)
     return {"dp": dp, "tp": strat.tp_axis, "sp": strat.seq_axis,
@@ -137,7 +137,7 @@ def axis_map_for(strat: Strategy) -> dict:
             "moe_a2a": strat.moe_impl == "a2a"}
 
 
-def lower_cell(cfg: ArchConfig, mesh: Mesh, strat: Strategy,
+def lower_cell(cfg: ArchConfig, mesh: Mesh, strat: ShardingRules,
                shape_name: str):
     """Lower (not compile) the right step for this cell."""
     from ..models import layers as L

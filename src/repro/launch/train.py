@@ -108,16 +108,12 @@ def run_elastic(prog, params, vocab: int, args, schedule=None) -> int:
         injector = RankFailureInjector({fail_at: rank})
         what = f"rank {rank} dies at step {fail_at}"
 
-    if args.backend == "spmd":
-        from repro.runtime.spmd import SpmdExecutor
-
-        def runner_factory(p, prm, devices):
-            return SpmdExecutor(p, params=prm, physical_devices=devices)
-    else:
-        from repro.runtime import Interpreter
-
-        def runner_factory(p, prm, devices):
-            return Interpreter(p, params=prm, track_memory=False)
+    # the registry's runner-factory shape IS the supervisor's contract:
+    # factory(prog, params, physical_devices) -> executor
+    from repro.runtime.executor import executor_factory, get_backend_spec
+    caps = get_backend_spec(args.backend).capabilities
+    opts = {"track_memory": False} if caps.memory_ledgers else {}
+    runner_factory = executor_factory(args.backend, **opts)
 
     ckpt_dir = tempfile.mkdtemp(prefix="repro_elastic_")
     try:
@@ -198,14 +194,13 @@ def main(argv=None):
     ap.add_argument("--strategy", default=None, metavar="JSON",
                     help="path to a Strategy JSON document "
                     "(e.g. the strategy.json --autotune saves)")
+    from repro.runtime.executor import backends_help, list_backends
     ap.add_argument("--backend", default=None,
-                    choices=["reference", "spmd"],
+                    choices=list(list_backends()),
                     help="execute one real training step of the "
                     "replayed --strategy on the reduced config's proxy "
-                    "program: 'reference' runs the oracle interpreter "
-                    "(simulated devices), 'spmd' lowers the compiled "
-                    "plan to jit+shard_map over faked host XLA devices "
-                    "(runtime.spmd) and reports measured step time")
+                    "program on the named runtime backend — "
+                    + backends_help())
     # elastic fault tolerance (repro.ft.elastic): run a short training
     # loop on the replayed --strategy, kill a rank mid-run, and let the
     # supervisor shrink the mesh, recompile, restore and resume
@@ -259,8 +254,7 @@ def main(argv=None):
         budget_bytes = int(args.tune_budget_gb * 2**30)
 
     if args.backend and not args.strategy:
-        print("--backend needs a --strategy document to execute")
-        return 2
+        ap.error("--backend needs a --strategy document to execute")
     chaos_schedule = None
     if args.chaos:
         from repro.ft import ChaosScheduleError, FaultSchedule
@@ -272,9 +266,8 @@ def main(argv=None):
             return 2
         args.elastic = True
     if args.elastic and not (args.strategy and args.backend):
-        print("--elastic needs --strategy and --backend "
-              "(reference or spmd)")
-        return 2
+        ap.error("--elastic needs --strategy and --backend "
+                 f"(one of: {', '.join(list_backends())})")
 
     if args.strategy:
         from repro import tune
@@ -287,13 +280,28 @@ def main(argv=None):
         except (StrategyError, OSError) as e:
             print(f"strategy: {e}")
             return 2
-        if args.backend == "spmd":
+        from repro.runtime.executor import get_backend_spec
+        backend_caps = (get_backend_spec(args.backend).capabilities
+                        if args.backend else None)
+        if backend_caps is not None and backend_caps.real_xla:
+            # a real-XLA backend must fake the mesh's host device count
+            # BEFORE anything touches jax devices (capability flag, not
+            # a backend-name compare)
             if strat.mesh is None:
-                print("strategy: --backend spmd needs a structured "
-                      "strategy with a Mesh (mesh-less documents have "
-                      "no device count to fake)")
+                print(f"strategy: --backend {args.backend} needs a "
+                      "structured strategy with a Mesh (mesh-less "
+                      "documents have no device count to fake)")
                 return 2
             from repro.launch.hostdevices import ensure_host_devices
+            if backend_caps.multi_controller:
+                # multi-controller transports block inside host
+                # callbacks; async CPU dispatch would let parked ranks
+                # starve their peers' programs (runtime/mpmd.py,
+                # _ensure_sync_cpu_dispatch).  Cheapest here, before
+                # the client exists — the executor rebuilds the client
+                # otherwise
+                jax.config.update("jax_cpu_enable_async_dispatch",
+                                  False)
             n_dev = strat.mesh.n_devices
             if chaos_schedule is not None:
                 # arrivals name physical device indices beyond the
@@ -350,19 +358,17 @@ def main(argv=None):
                 return run_elastic(prog2, params_real,
                                    exec_cfg.vocab, args,
                                    schedule=chaos_schedule)
-            if args.backend == "spmd":
-                from repro.runtime.spmd import SpmdExecutor
-                ex = SpmdExecutor(prog2, params=params_real)
-                res = ex.run(batch)
+            from repro.runtime.executor import make_executor
+            ex = make_executor(args.backend, prog2, params=params_real)
+            res = ex.run(batch)
+            if backend_caps.measured_time:
                 ms = ex.measure(batch, reps=3) * 1e3
-                print(f"backend[spmd] loss={res.loss:.6f}  "
+                print(f"backend[{args.backend}] loss={res.loss:.6f}  "
                       f"measured_step={ms:.2f}ms on "
                       f"{res.stats['devices']} host devices "
                       f"({res.stats['tasks']} plan tasks)")
             else:
-                from repro.runtime import Interpreter
-                res = Interpreter(prog2, params=params_real).run(batch)
-                print(f"backend[reference] loss={res.loss:.6f}  "
+                print(f"backend[{args.backend}] loss={res.loss:.6f}  "
                       f"peak={res.max_peak()/2**20:.2f}MiB "
                       f"({res.stats['tasks']} plan tasks)")
             return 0

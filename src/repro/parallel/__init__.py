@@ -1,6 +1,16 @@
 """SPMD lowering of Piper strategies: shardings, ZeRO, EP, pipeline."""
-from .sharding import (Strategy, batch_shardings, cache_shardings,
+from .sharding import (ShardingRules, batch_shardings, cache_shardings,
                        opt_state_shardings, params_shardings)
 
-__all__ = ["Strategy", "batch_shardings", "cache_shardings",
+__all__ = ["ShardingRules", "batch_shardings", "cache_shardings",
            "opt_state_shardings", "params_shardings"]
+
+
+def __getattr__(name: str):
+    if name == "Strategy":
+        # route through the sharding module's shim so both import
+        # spellings warn identically (and error under pytest)
+        from . import sharding
+        return sharding.Strategy
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -26,8 +26,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 @dataclass(frozen=True)
-class Strategy:
-    """High-level parallelism strategy for the SPMD lowering."""
+class ShardingRules:
+    """The spmd backend's internal sharding rules — the lowered form of
+    a first-class ``core.strategy.Strategy`` (``from_core`` is the only
+    supported way in).  Known until PR 10 as ``parallel.sharding.
+    Strategy``; that import still works behind a DeprecationWarning
+    (module ``__getattr__`` below), erroring under pytest."""
     dp_axes: tuple = ("data",)       # + ("pod",) on the multi-pod mesh
     tp_axis: str = "model"
     zero_stage: int = 3              # 1 | 2 | 3
@@ -53,7 +57,7 @@ class Strategy:
         return "data" if self.zero_stage >= 3 else None
 
     @staticmethod
-    def from_core(strat, mesh, **overrides) -> "Strategy":
+    def from_core(strat, mesh, **overrides) -> "ShardingRules":
         """Derive the SPMD-lowering strategy from a first-class
         ``core.strategy.Strategy`` — the single source of truth both
         execution worlds now share.  The mapping:
@@ -81,7 +85,7 @@ class Strategy:
         if strat.expert_parallel is not None:
             kw["moe_impl"] = "a2a"
         kw.update(overrides)
-        return Strategy(**kw)
+        return ShardingRules(**kw)
 
 
 def _dim_ok(shape, dim, mesh, axis) -> bool:
@@ -118,7 +122,7 @@ _SSM_ROW = {"bc_proj", "x_proj", "dt_proj2"}
 
 
 def param_spec(path: tuple, shape: tuple, mesh: Mesh,
-               strat: Strategy) -> P:
+               strat: ShardingRules) -> P:
     """Sharding rule for one parameter.  ``path`` is the flattened dict
     path, e.g. ("layers", "attn", "wq"); stacked layer params carry a
     leading n_layers axis which stays unsharded."""
@@ -167,7 +171,7 @@ def param_spec(path: tuple, shape: tuple, mesh: Mesh,
     return P(*([None] * len(shape)))
 
 
-def params_shardings(params_avals, mesh: Mesh, strat: Strategy):
+def params_shardings(params_avals, mesh: Mesh, strat: ShardingRules):
     flat, treedef = jax.tree_util.tree_flatten_with_path(params_avals)
     out = []
     for kpath, leaf in flat:
@@ -178,7 +182,7 @@ def params_shardings(params_avals, mesh: Mesh, strat: Strategy):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def opt_state_shardings(params_avals, mesh: Mesh, strat: Strategy):
+def opt_state_shardings(params_avals, mesh: Mesh, strat: ShardingRules):
     """AdamW m/v: ZeRO>=1 shards over 'data' on the largest divisible
     dim (in addition to the param's own sharding)."""
     p_sh = params_shardings(params_avals, mesh, strat)
@@ -203,7 +207,7 @@ def opt_state_shardings(params_avals, mesh: Mesh, strat: Strategy):
     return jax.tree_util.tree_map(widen, params_avals, p_sh)
 
 
-def batch_shardings(batch_avals, mesh: Mesh, strat: Strategy):
+def batch_shardings(batch_avals, mesh: Mesh, strat: ShardingRules):
     def one(aval):
         if not aval.shape:
             return NamedSharding(mesh, P())
@@ -219,7 +223,7 @@ def batch_shardings(batch_avals, mesh: Mesh, strat: Strategy):
     return jax.tree_util.tree_map(one, batch_avals)
 
 
-def cache_shardings(cache_avals, mesh: Mesh, strat: Strategy):
+def cache_shardings(cache_avals, mesh: Mesh, strat: ShardingRules):
     """Decode caches: batch over dp axes, long dims over the tp axis.
     k/v: (L, B, Hkv, S, D) -> seq over tp; ssm: (L, B, …, N) -> d_inner
     (or heads) over tp; conv: (L, B, K-1, di) -> di over tp."""
@@ -252,3 +256,18 @@ def cache_shardings(cache_avals, mesh: Mesh, strat: Strategy):
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_avals)
     out = [one_path(kp, leaf) for kp, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def __getattr__(name: str):
+    if name == "Strategy":
+        import warnings
+        warnings.warn(
+            "parallel.sharding.Strategy is deprecated: the class is an "
+            "internal detail of the spmd backend, renamed ShardingRules."
+            "  Describe parallelism with the first-class "
+            "core.strategy.Strategy and let the backend derive its "
+            "rules (launch.steps.strategy_for(core=...))",
+            DeprecationWarning, stacklevel=2)
+        return ShardingRules
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

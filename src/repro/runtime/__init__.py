@@ -1,11 +1,18 @@
 """Piper strategy-agnostic runtime: interpreter + timeline simulator +
-the SPMD executor that runs compiled plans on real XLA devices.
+the SPMD and MPMD executors that run compiled plans on real XLA devices.
 
-``spmd`` is imported lazily: the executor pulls in ``shard_map`` and is
-only needed by ``--backend spmd`` callers, who import it explicitly
-(``from repro.runtime.spmd import SpmdExecutor``) or via this package's
-``SpmdExecutor`` re-export.
+Backend selection goes through ``runtime.executor`` — the registry
+(``get_backend`` / ``list_backends`` / ``make_executor`` /
+``executor_factory``) is the ONE front door ``--backend``, the elastic
+supervisor, and the benchmarks use; see docs/backends.md.
+
+``spmd`` and ``mpmd`` are imported lazily: each pulls in heavyweight
+tracing machinery only ``--backend {spmd,mpmd}`` callers need, and the
+registry resolves them on demand.
 """
+from .executor import (BackendCapabilities, Executor, UnknownBackendError,
+                       executor_factory, get_backend, list_backends,
+                       make_executor, register_backend)
 from .interpreter import (Interpreter, RunResult, ScheduleReplay,
                           replay_schedule)
 from .memory import (DeviceLedger, bucket_persistent_bytes,
@@ -13,11 +20,22 @@ from .memory import (DeviceLedger, bucket_persistent_bytes,
 
 __all__ = ["Interpreter", "RunResult", "ScheduleReplay",
            "replay_schedule", "DeviceLedger", "bucket_persistent_bytes",
-           "timeline_peak_bytes", "SpmdExecutor", "SpmdBackendError"]
+           "timeline_peak_bytes", "SpmdExecutor", "SpmdBackendError",
+           "MpmdExecutor", "MpmdBackendError", "MpmdHandshakeError",
+           "MpmdTransportError", "BackendCapabilities", "Executor",
+           "UnknownBackendError", "executor_factory", "get_backend",
+           "list_backends", "make_executor", "register_backend"]
+
+_LAZY = {
+    "SpmdExecutor": "spmd", "SpmdBackendError": "spmd",
+    "MpmdExecutor": "mpmd", "MpmdBackendError": "mpmd",
+    "MpmdHandshakeError": "mpmd", "MpmdTransportError": "mpmd",
+}
 
 
 def __getattr__(name):
-    if name in ("SpmdExecutor", "SpmdBackendError"):
-        from . import spmd
-        return getattr(spmd, name)
+    mod = _LAZY.get(name)
+    if mod is not None:
+        import importlib
+        return getattr(importlib.import_module(f".{mod}", __name__), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

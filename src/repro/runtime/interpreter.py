@@ -37,6 +37,7 @@ from ..core.plan import (ROLE_COLL,
                          GlobalPlan,
                          Task,
                          TaskKey)
+from .executor import register_backend
 from .memory import (GRAD_BYTES_PER_ELEM, DeviceLedger,
                      bucket_persistent_bytes, gather_param_bytes)
 
@@ -63,6 +64,7 @@ def tree_nbytes_actual(tree) -> int:
                for l in jax.tree_util.tree_leaves(tree) if l is not None)
 
 
+@register_backend("reference")
 class Interpreter:
     def __init__(self, prog: CompiledProgram,
                  params: Optional[dict[str, Any]] = None,
@@ -81,6 +83,9 @@ class Interpreter:
         if gather_limit is None:
             gather_limit = int(self.dag.meta.get("gather_limit", 2))
         self.gather_limit = gather_limit
+        # Executor-protocol surface: devices are simulated, so the
+        # "physical" ranks are simply the plan's logical device ids
+        self.physical_devices = tuple(sorted(self.plan.devices))
         # per-node jitted exec functions (paper: Chunk.exec dispatch) —
         # retracing eagerly per call would dominate dispatch overhead
         self._jit_cache: dict[int, Any] = {}
@@ -105,6 +110,18 @@ class Interpreter:
         self._gather_left0 = {g: {(c, d) for c in cs
                                   for d in self.dag.nodes[c].devices}
                               for g, cs in self._gather_consumers.items()}
+
+    @classmethod
+    def compile(cls, prog: CompiledProgram,
+                params: Optional[dict[str, Any]] = None, *,
+                physical_devices: Optional[Any] = None,
+                **opts) -> "Interpreter":
+        """Executor-protocol front door.  ``physical_devices`` is
+        accepted for interface parity (the elastic supervisor passes
+        it to every backend) but ignored: the interpreter simulates
+        its devices, so any surviving-physical-device mapping is a
+        no-op here."""
+        return cls(prog, params, **opts)
 
     # ------------------------------------------------------------------ run
     def run(self, batch: dict[str, Any]) -> RunResult:

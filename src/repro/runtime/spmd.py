@@ -91,9 +91,10 @@ except ImportError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..core.compiler import CompiledProgram
-from ..core.dag import Node
+from ..core.dag import Node, TrainingDAG
 from ..core.plan import ROLE_SEND
 from ..core.scheduler import validate_comm_order
+from .executor import jaxpr_eqn_count, register_backend
 from .interpreter import RunResult, ScheduleReplay, _PlanWalker
 
 AXIS = "spmd"
@@ -168,6 +169,45 @@ def _unflatten_by_dtype(flats, recipe):
     return tree_unflatten(treedef, leaves)
 
 
+def gather_chunk_args(dag: TrainingDAG, node: Node, feeds, store):
+    """``Interpreter._gather_chunk_inputs`` on rank-local (nid, slot)
+    keys: multi-source cotangent slots sum in edge order; seed/zero
+    cotangent slots materialize from the forward's out_specs.  Shared
+    by the SPMD trace (one whole-mesh program) and the MPMD per-rank
+    traces (``runtime/mpmd.py``) — one source of truth for how a traced
+    chunk assembles its inputs."""
+    m = node.meta.get("n_inputs", 0)
+    args: list = []
+    for slot in range(m):
+        key = (node.id, slot)
+        if key in feeds:
+            args.append(feeds[key])
+            continue
+        vals = [store[(e.src, e.src_out)]
+                for e in dag.in_edges(node.id)
+                if e.dst_in == slot]
+        if not vals:
+            if slot in node.meta.get("zero_cot_slots", []) \
+                    or slot in node.meta.get("seed_slots", []):
+                args.append(None)
+                continue
+            raise KeyError(
+                f"no value for {node.short()} slot {slot}")
+        args.append(vals[0] if len(vals) == 1
+                    else sum(vals[1:], vals[0]))
+    if "fwd_node" in node.meta:
+        fwd = dag.nodes[node.meta["fwd_node"]]
+        n_cots = node.meta.get("n_cots", fwd.n_outputs)
+        m0 = node.meta["n_inputs"] - n_cots
+        for slot in node.meta.get("seed_slots", []):
+            s = fwd.out_specs[slot - m0]
+            args[slot] = jnp.ones(s.shape, dtype=s.dtype)
+        for slot in node.meta.get("zero_cot_slots", []):
+            s = fwd.out_specs[slot - m0]
+            args[slot] = jnp.zeros(s.shape, dtype=s.dtype)
+    return args
+
+
 @dataclass
 class _Built:
     """One traced+jitted program (per batch-shape signature) plus the
@@ -178,6 +218,7 @@ class _Built:
     red_group: dict = field(default_factory=dict)      # bucket -> devices
     acc_cnt: dict = field(default_factory=dict)        # bucket -> int
     n_tasks: int = 0
+    traced_sm: Any = None   # unjitted shard_map fn (trace_size probes it)
 
 
 class SpmdBackendError(RuntimeError):
@@ -186,6 +227,7 @@ class SpmdBackendError(RuntimeError):
     express)."""
 
 
+@register_backend("spmd")
 class SpmdExecutor:
     """Execute a ``CompiledProgram`` as one jit+shard_map SPMD program
     over ``len(plan.devices)`` real XLA devices.
@@ -319,6 +361,7 @@ class SpmdExecutor:
         traced = self._make_traced(trace_order, b)
         sm = _shard_map(traced, mesh=self.mesh, in_specs=(P(), P(AXIS)),
                         out_specs=P(AXIS), check_rep=False)
+        b.traced_sm = sm
         b.fn = jax.jit(sm)
         return b
 
@@ -371,44 +414,9 @@ class SpmdExecutor:
         return traced
 
     # -- chunks --------------------------------------------------------------
-    def _chunk_args(self, node: Node, feeds, store):
-        """Interpreter._gather_chunk_inputs, on rank-local (nid, slot)
-        keys: multi-source cotangent slots sum in edge order; seed/zero
-        cotangent slots materialize from the forward's out_specs."""
-        m = node.meta.get("n_inputs", 0)
-        args: list = []
-        for slot in range(m):
-            key = (node.id, slot)
-            if key in feeds:
-                args.append(feeds[key])
-                continue
-            vals = [store[(e.src, e.src_out)]
-                    for e in self.dag.in_edges(node.id)
-                    if e.dst_in == slot]
-            if not vals:
-                if slot in node.meta.get("zero_cot_slots", []) \
-                        or slot in node.meta.get("seed_slots", []):
-                    args.append(None)
-                    continue
-                raise KeyError(
-                    f"no value for {node.short()} slot {slot}")
-            args.append(vals[0] if len(vals) == 1
-                        else sum(vals[1:], vals[0]))
-        if "fwd_node" in node.meta:
-            fwd = self.dag.nodes[node.meta["fwd_node"]]
-            n_cots = node.meta.get("n_cots", fwd.n_outputs)
-            m0 = node.meta["n_inputs"] - n_cots
-            for slot in node.meta.get("seed_slots", []):
-                s = fwd.out_specs[slot - m0]
-                args[slot] = jnp.ones(s.shape, dtype=s.dtype)
-            for slot in node.meta.get("zero_cot_slots", []):
-                s = fwd.out_specs[slot - m0]
-                args[slot] = jnp.zeros(s.shape, dtype=s.dtype)
-        return args
-
     def _trace_chunk(self, node, rank, prm, feeds, store, gathered,
                      grad_acc, grad_cnt, acc_devs, loss_vals, built):
-        args = self._chunk_args(node, feeds, store)
+        args = gather_chunk_args(self.dag, node, feeds, store)
         g = node.meta.get("param_from_comm")
         if node.bucket is not None:
             bparams = (gathered[g][node.bucket] if g in gathered
@@ -651,3 +659,22 @@ class SpmdExecutor:
             jax.block_until_ready(b.fn(self.params, feeds))
             times.append(time.perf_counter() - t0)
         return min(times)
+
+    # ------------------------------------------------------------ protocol
+    @classmethod
+    def compile(cls, prog: CompiledProgram,
+                params: Optional[dict[str, Any]] = None, *,
+                physical_devices: Optional[Sequence[int]] = None,
+                **opts) -> "SpmdExecutor":
+        return cls(prog, params, physical_devices=physical_devices,
+                   **opts)
+
+    def trace_size(self, batch: dict[str, Any]) -> int:
+        """Whole-mesh traced program size (total jaxpr equation count,
+        sub-jaxprs included) — every device carries this entire trace.
+        The MPMD per-rank programs (``MpmdExecutor.trace_sizes``) must
+        each come in strictly below it for world >= 4."""
+        b = self._ensure_built(batch)
+        feeds = self._stack_feeds(batch)
+        return jaxpr_eqn_count(
+            jax.make_jaxpr(b.traced_sm)(self.params, feeds))

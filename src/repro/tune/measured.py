@@ -60,12 +60,13 @@ def measure_program(prog, batch: Optional[dict] = None,
     """Measured wall-clock seconds/step of ``prog`` on the SPMD
     executor (requires >= ``len(plan.devices)`` XLA devices — see
     ``launch.hostdevices.ensure_host_devices``)."""
-    from ..runtime.spmd import SpmdExecutor
+    from ..runtime.executor import make_executor
     if params is None:
         params = materialize_params(prog.params)
     if batch is None:
         batch = synth_batch(prog)
-    return SpmdExecutor(prog, params=params).measure(batch, reps=reps)
+    return make_executor("spmd", prog, params=params).measure(batch,
+                                                             reps=reps)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,283 @@
+"""The unified Executor API (runtime/executor.py): registry behavior,
+the ``Executor`` protocol conformance of all three builtin backends,
+the ``--backend`` CLI front door (argparse exit-2 contract), and the
+PR-10 deprecation gate on the old ``parallel.sharding.Strategy``
+spelling (internal to the spmd backend, renamed ``ShardingRules``)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    from repro.runtime.executor import (BackendCapabilities,
+                                        get_backend_spec, list_backends)
+
+    assert list_backends() == ("reference", "spmd", "mpmd")
+    ref = get_backend_spec("reference").capabilities
+    spmd = get_backend_spec("spmd").capabilities
+    mpmd = get_backend_spec("mpmd").capabilities
+    assert isinstance(ref, BackendCapabilities)
+    # the flags callers actually branch on
+    assert not ref.real_xla and ref.memory_ledgers
+    assert spmd.real_xla and spmd.measured_time and not spmd.per_rank_trace
+    assert mpmd.real_xla and mpmd.per_rank_trace and mpmd.multi_controller
+
+
+def test_unknown_backend_lists_registered_names():
+    from repro.runtime.executor import (UnknownBackendError,
+                                        executor_factory, get_backend,
+                                        list_backends)
+
+    for call in (lambda: get_backend("smpd"),
+                 lambda: executor_factory("smpd")):
+        with pytest.raises(UnknownBackendError) as ei:
+            call()
+        msg = str(ei.value)
+        assert "smpd" in msg
+        for name in list_backends():
+            assert name in msg, (name, msg)
+
+
+def test_backends_help_mentions_every_backend():
+    from repro.runtime.executor import backends_help, list_backends
+
+    text = backends_help()
+    for name in list_backends():
+        assert f"'{name}'" in text, (name, text)
+
+
+def test_register_backend_third_party_roundtrip():
+    """Non-builtin registration: needs explicit capabilities, stamps the
+    class, resolves through the same front door."""
+    from repro.runtime import executor as ex_mod
+    from repro.runtime.executor import (BackendCapabilities, get_backend,
+                                        register_backend)
+
+    with pytest.raises(ValueError, match="capabilities"):
+        register_backend("thirdparty")(type("X", (), {}))
+
+    caps = BackendCapabilities(real_xla=False)
+    try:
+        @register_backend("thirdparty", capabilities=caps,
+                          summary="test stub")
+        class Stub:
+            @classmethod
+            def compile(cls, prog, params=None, *,
+                        physical_devices=None, **opts):
+                return cls()
+
+        assert Stub.backend_name == "thirdparty"
+        assert Stub.capabilities is caps
+        assert get_backend("thirdparty") is Stub
+    finally:
+        ex_mod._REGISTRY.pop("thirdparty", None)
+
+
+def test_executor_factory_shape():
+    """``executor_factory`` produces the ``ElasticSupervisor``
+    runner-factory contract: ``factory(prog, params, physical_devices)``
+    with the backend resolved lazily (reference runs anywhere)."""
+    import jax
+
+    from helpers import (inputs_spec, make_batch, make_mlp_forward,
+                         make_mlp_params)
+    from repro.core import Mesh, Pipeline, Strategy, ZeRO, compile_training
+    from repro.runtime.executor import Executor, executor_factory
+
+    S, BATCH = 4, 8
+    params = make_mlp_params(jax.random.PRNGKey(0), S)
+    prog = compile_training(
+        make_mlp_forward(S), params, inputs_spec(BATCH),
+        strategy=Strategy(Mesh(pp=2, dp=2),
+                          Pipeline("1f1b", n_mb=2) | ZeRO(stage=3)))
+    factory = executor_factory("reference")
+    assert factory.backend_name == "reference"
+    runner = factory(prog, params, None)
+    assert isinstance(runner, Executor)
+    out = runner.run(make_batch(BATCH))
+    assert out.loss == pytest.approx(out.loss)  # finite, no NaN
+    # the elastic-resume contract: swap weights without rebuilding
+    runner.params = params
+    assert runner.params is params
+
+
+# ---------------------------------------------------------------------------
+# Executor protocol conformance (all three backends)
+# ---------------------------------------------------------------------------
+
+def test_protocol_surface_all_backends():
+    """Import-level conformance: every registered class carries the
+    protocol surface (compile classmethod, run, stamped identity)."""
+    from repro.runtime.executor import (BackendCapabilities, get_backend,
+                                        get_backend_spec, list_backends)
+
+    for name in list_backends():
+        cls = get_backend(name)
+        assert cls.backend_name == name
+        assert cls.capabilities is get_backend_spec(name).capabilities
+        assert isinstance(cls.capabilities, BackendCapabilities)
+        assert callable(getattr(cls, "compile"))
+        assert callable(getattr(cls, "run"))
+
+
+CONFORMANCE_CHILD = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from helpers import (make_mlp_params, make_mlp_forward,
+                         inputs_spec, make_batch)
+    from repro.core import (compile_training, Mesh, Pipeline, ZeRO,
+                            Strategy)
+    from repro.runtime.executor import (Executor, list_backends,
+                                        make_executor)
+
+    S, BATCH = 4, 8
+    params = make_mlp_params(jax.random.PRNGKey(0), S)
+    prog = compile_training(
+        make_mlp_forward(S), params, inputs_spec(BATCH),
+        strategy=Strategy(Mesh(pp=2, dp=2),
+                          Pipeline("1f1b", n_mb=2) | ZeRO(stage=3)))
+    batch = make_batch(BATCH)
+    losses = {}
+    for name in list_backends():
+        ex = make_executor(name, prog, params=params)
+        assert isinstance(ex, Executor), name
+        assert ex.backend_name == name
+        assert len(ex.physical_devices) == 4, (name, ex.physical_devices)
+        out = ex.run(batch)
+        assert sorted(out.grads), name
+        losses[name] = float(out.loss)
+        ex.params = params          # settable, per the protocol
+    vals = sorted(losses.values())
+    assert np.allclose(vals[0], vals[-1], rtol=1e-5), losses
+    print("CONFORMANCE_OK", losses)
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.mpmd
+def test_protocol_conformance_runs_all_backends():
+    """Behavioral conformance: one ``make_executor`` front door builds
+    all three backends on the same compiled plan; each satisfies the
+    runtime-checkable protocol and agrees on the step loss."""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": f"{_ROOT / 'src'}{os.pathsep}{_ROOT / 'tests'}"}
+    r = subprocess.run(
+        [sys.executable, "-c", CONFORMANCE_CHILD],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert "CONFORMANCE_OK" in r.stdout, \
+        (r.stdout[-2000:], r.stderr[-4000:])
+
+
+# ---------------------------------------------------------------------------
+# the --backend CLI front door
+# ---------------------------------------------------------------------------
+
+def test_cli_backend_without_strategy_is_argparse_error(capsys):
+    """``--backend`` without ``--strategy`` must exit 2 through
+    ``ArgumentParser.error`` (usage + message on stderr), not a manual
+    print-and-return."""
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit) as ei:
+        main(["--backend", "spmd"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "usage:" in err
+    assert "--backend needs a --strategy document" in err
+
+
+def test_cli_unknown_backend_choice_lists_names(capsys):
+    """An unregistered ``--backend`` value is rejected by argparse's
+    choices (sourced from ``list_backends()``), naming the valid set."""
+    from repro.launch.train import main
+    from repro.runtime.executor import list_backends
+
+    with pytest.raises(SystemExit) as ei:
+        main(["--backend", "smpd"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    for name in list_backends():
+        assert name in err, (name, err)
+
+
+def test_cli_elastic_needs_strategy_and_backend(capsys):
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit) as ei:
+        main(["--elastic"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "--elastic needs --strategy and --backend" in err
+    assert "mpmd" in err   # the one-of list comes from the registry
+
+
+def test_no_string_backend_dispatch_outside_registry():
+    """The api_redesign acceptance grep: no ``args.backend == "spmd"``
+    style string dispatch survives outside runtime/executor.py —
+    callers branch on capabilities or go through the registry."""
+    offenders = []
+    for p in (_ROOT / "src").rglob("*.py"):
+        if p.name == "executor.py":
+            continue
+        text = p.read_text()
+        for needle in ('backend == "spmd"', "backend == 'spmd'",
+                       'backend == "mpmd"', "backend == 'mpmd'",
+                       'backend == "reference"'):
+            if needle in text:
+                offenders.append((str(p), needle))
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# the Strategy-worlds collapse: parallel.sharding.Strategy is deprecated
+# ---------------------------------------------------------------------------
+
+def test_sharding_strategy_deprecated_alias():
+    """Both old spellings still resolve — to ``ShardingRules`` — but
+    warn; under this repo's pytest filterwarnings config the warning is
+    an error, so no in-repo code may use them."""
+    import repro.parallel as par
+    import repro.parallel.sharding as sharding
+
+    for src in (sharding, par):
+        with pytest.warns(DeprecationWarning,
+                          match="parallel.sharding.Strategy is "
+                                "deprecated"):
+            cls = src.Strategy
+        assert cls is sharding.ShardingRules
+
+
+def test_sharding_unknown_attr_still_raises():
+    import repro.parallel as par
+    import repro.parallel.sharding as sharding
+
+    for src in (sharding, par):
+        with pytest.raises(AttributeError):
+            src.Nonexistent
+
+
+def test_sharding_rules_is_the_spmd_lowering():
+    """``ShardingRules.from_core`` remains the one supported way in:
+    the first-class ``core.strategy.Strategy`` lowers to the spmd
+    backend's rules (``launch.steps.strategy_for``)."""
+    from repro.core import Mesh
+    from repro.launch.steps import strategy_for
+    from repro.parallel.sharding import ShardingRules
+
+    rules = strategy_for(Mesh(pp=2, dp=2), zero_stage=3)
+    assert isinstance(rules, ShardingRules)
+    assert rules.zero_stage == 3

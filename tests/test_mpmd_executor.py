@@ -1,0 +1,265 @@
+"""MPMD multi-controller executor (runtime/mpmd.py): fp64 bit-parity
+against the reference interpreter on 8 faked host XLA devices across
+the acceptance grid {1f1b, gpipe, dualpipev} x ZeRO{0, 3}, one case on
+the tcp (localhost socket) transport, and the trace-size claim: every
+per-rank jit program is strictly smaller than the SPMD whole-mesh
+trace for world >= 4.
+
+Parity cases run in subprocesses — the 8-device XLA flag must not leak
+into other tests' device counts (the exact failure mode
+``launch.hostdevices`` exists to prevent).  The handshake contract
+tests run in-process: the PIPER025 signature exchange needs a
+transport, not devices (rank programs may oversubscribe one CPU
+device), so no subprocess or XLA flag is required."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.mpmd
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+CHILD = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)   # fp64 bit-parity
+    import numpy as np
+    from helpers import (make_mlp_params, make_mlp_forward,
+                         inputs_spec, make_batch)
+    from repro.core import (compile_training, Mesh, Pipeline, ZeRO,
+                            Strategy)
+    from repro.runtime import Interpreter
+    from repro.runtime.mpmd import MpmdExecutor
+    from repro.runtime.spmd import SpmdExecutor
+
+    S, BATCH = 8, 16
+
+    CASES = {
+        "1f1b-z0":      lambda: Pipeline("1f1b", n_mb=4) | ZeRO(stage=0),
+        "1f1b-z3":      lambda: Pipeline("1f1b", n_mb=4) | ZeRO(stage=3),
+        "gpipe-z0":     lambda: Pipeline("gpipe", n_mb=4) | ZeRO(stage=0),
+        "gpipe-z3":     lambda: Pipeline("gpipe", n_mb=4) | ZeRO(stage=3),
+        "dualpipev-z0": lambda: Pipeline("dualpipev", n_mb=8)
+                                | ZeRO(stage=0),
+        "dualpipev-z3": lambda: Pipeline("dualpipev", n_mb=8)
+                                | ZeRO(stage=3),
+        "1f1b-z3-tcp":  lambda: Pipeline("1f1b", n_mb=4) | ZeRO(stage=3),
+    }
+
+    def bits(x):
+        return np.asarray(x).tobytes()
+
+    def build(name):
+        params = make_mlp_params(jax.random.PRNGKey(0), S)
+        return compile_training(
+            make_mlp_forward(S), params, inputs_spec(BATCH),
+            strategy=Strategy(Mesh(pp=4, dp=2), CASES[name]()))
+
+    for name in json.loads(sys.argv[1]):
+        if name == "trace-size":
+            # acceptance metric: MPMD traces ONLY each rank's chunks, so
+            # for world >= 4 every rank program must be strictly smaller
+            # than the SPMD whole-mesh trace of the same plan
+            prog = build("1f1b-z3")
+            batch = make_batch(BATCH)
+            per_rank = MpmdExecutor(prog, handshake=False) \\
+                .trace_sizes(batch)
+            whole = SpmdExecutor(prog).trace_size(batch)
+            assert len(per_rank) == 8 and all(
+                n < whole for n in per_rank.values()), (per_rank, whole)
+            print("TRACE_OK", max(per_rank.values()), "<", whole)
+            continue
+        transport = "tcp" if name.endswith("-tcp") else "inproc"
+        prog = build(name)
+        batch = make_batch(BATCH)
+        ref = Interpreter(prog).run(batch)
+        ex = MpmdExecutor(prog, transport=transport)
+        got = ex.run(batch)
+        ex.close()
+        assert bits(np.float64(ref.loss)) == bits(np.float64(got.loss)), \\
+            (name, ref.loss, got.loss)
+        assert sorted(ref.grads) == sorted(got.grads), name
+        for bkt in ref.grads:
+            jax.tree_util.tree_map(
+                lambda a, b: (_ for _ in ()).throw(AssertionError(
+                    f"{name}:{bkt} grad bits differ")) if bits(a) != bits(b)
+                else None,
+                ref.grads[bkt], got.grads[bkt])
+        assert got.stats["backend"] == "mpmd", got.stats
+        print("CASE_OK", name, ref.loss)
+
+    print("MPMD_PARITY_OK")
+""")
+
+
+def _run_child(cases):
+    # inherit the parent env (setup-python runners need their exported
+    # vars); the child overrides XLA_FLAGS itself before importing jax
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": f"{_ROOT / 'src'}{os.pathsep}{_ROOT / 'tests'}"}
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD, json.dumps(cases)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert "MPMD_PARITY_OK" in r.stdout, \
+        (r.stdout[-2000:], r.stderr[-4000:])
+    for c in cases:
+        marker = "TRACE_OK" if c == "trace-size" else f"CASE_OK {c}"
+        assert marker in r.stdout, (c, r.stdout[-2000:])
+
+
+@pytest.mark.slow
+def test_parity_1f1b_and_gpipe():
+    """Acceptance grid, part 1: {1f1b, gpipe} x ZeRO{0, 3} bit-parity
+    on 8 controller threads / 8 faked devices."""
+    _run_child(["1f1b-z0", "1f1b-z3", "gpipe-z0", "gpipe-z3"])
+
+
+@pytest.mark.slow
+def test_parity_dualpipev():
+    """Acceptance grid, part 2: the split-backward schedule — the
+    hardest interleaving for blocking per-rank transports."""
+    _run_child(["dualpipev-z0", "dualpipev-z3"])
+
+
+@pytest.mark.slow
+def test_tcp_transport_and_trace_size():
+    """Real socket transport parity, plus the per-rank-trace < SPMD
+    whole-mesh-trace acceptance bound for world >= 4."""
+    _run_child(["1f1b-z3-tcp", "trace-size"])
+
+
+# ---------------------------------------------------------------------------
+# in-process contracts (no faked devices needed — rank programs may
+# oversubscribe the single CPU device, and the handshake needs none)
+# ---------------------------------------------------------------------------
+
+def _small_prog():
+    import jax
+
+    from helpers import inputs_spec, make_mlp_forward, make_mlp_params
+    from repro.core import Mesh, Pipeline, Strategy, ZeRO, compile_training
+
+    S, BATCH = 4, 8
+    params = make_mlp_params(jax.random.PRNGKey(0), S)
+    return compile_training(
+        make_mlp_forward(S), params, inputs_spec(BATCH),
+        strategy=Strategy(Mesh(pp=2, dp=2),
+                          Pipeline("1f1b", n_mb=2) | ZeRO(stage=3)))
+
+
+def test_handshake_corrupt_signature_names_both_ranks():
+    """PIPER025 negative path: a rank whose wire signature disagrees
+    with its peers must fail the startup handshake with an error naming
+    the code and BOTH ends of the broken channel."""
+    from repro.runtime.mpmd import MpmdExecutor, MpmdHandshakeError
+
+    prog = _small_prog()
+    sig = prog.plan.rank_signature(1, prog.dag)
+    # drop one p2p endpoint: the peer now advertises a channel length
+    # rank 1 does not — exactly what a mis-deployed rank binary does
+    if sig["sends"]:
+        peer = sig["sends"][0][0]
+        sig = {**sig, "sends": sig["sends"][1:]}
+    else:
+        peer = sig["recvs"][0][0]
+        sig = {**sig, "recvs": sig["recvs"][1:]}
+    with pytest.raises(MpmdHandshakeError) as ei:
+        MpmdExecutor(prog, signature_overrides={1: sig})
+    msg = str(ei.value)
+    assert "PIPER025" in msg, msg
+    assert "rank 1" in msg, msg
+    assert f"rank {peer}" in msg, msg
+
+
+def test_handshake_garbage_bytes_rejected():
+    """A byte-level corrupt signature (truncated JSON from a flaky
+    bootstrap) must surface as a handshake failure, not a hang or a
+    silent desync later."""
+    from repro.runtime.mpmd import (MpmdBackendError, MpmdExecutor,
+                                    MpmdHandshakeError)
+
+    prog = _small_prog()
+    with pytest.raises((MpmdHandshakeError, MpmdBackendError)) as ei:
+        MpmdExecutor(prog, timeout=10.0,
+                     signature_overrides={
+                         2: b'{"device": 2, "sends": [], "recvs": [],'
+                            b' "collectives": []}'})
+    msg = str(ei.value)
+    assert "PIPER025" in msg, msg
+    assert "rank 2" in msg, msg
+
+
+def test_matching_signatures_handshake_ok():
+    """Positive control: the untampered pairwise exchange succeeds and
+    the executor is usable (constructor returns, transport reset)."""
+    from repro.runtime.mpmd import MpmdExecutor
+
+    prog = _small_prog()
+    ex = MpmdExecutor(prog)          # handshake on by default
+    assert ex.n == 4
+    ex.close()
+
+
+def test_unknown_transport_rejected():
+    from repro.runtime.mpmd import MpmdBackendError, MpmdExecutor
+
+    prog = _small_prog()
+    with pytest.raises(MpmdBackendError, match="carrier-pigeon"):
+        MpmdExecutor(prog, transport="carrier-pigeon")
+
+
+def test_invalid_comm_order_rejected_before_threads():
+    """Same static gate as the SPMD executor: a plan failing
+    ``validate_comm_order`` is rejected in the constructor, before any
+    controller thread or handshake exists."""
+    from repro.core import (CompiledProgram, ScheduleRejected, TrainingDAG,
+                            ValueSpec)
+    from repro.core.plan import ROLE_COLL, DevicePlan, GlobalPlan, Task
+    from repro.runtime.mpmd import MpmdExecutor
+
+    dag = TrainingDAG()
+    ag = dag.new_node(kind="comm", op="all_gather", name="ag",
+                      devices=(0, 1), group=(0, 1), payload="param",
+                      out_specs=[ValueSpec((8,))])
+    ar = dag.new_node(kind="comm", op="all_reduce", name="ar",
+                      devices=(0, 1), group=(0, 1), payload="grad",
+                      out_specs=[ValueSpec((8,))])
+    p0, p1 = DevicePlan(device=0), DevicePlan(device=1)
+    p0.append(Task(ag.id, 0, ROLE_COLL, "zero"))
+    p0.append(Task(ar.id, 0, ROLE_COLL, "zero"))
+    p1.append(Task(ar.id, 1, ROLE_COLL, "zero"))  # flipped on rank 1
+    p1.append(Task(ag.id, 1, ROLE_COLL, "zero"))
+    plan = GlobalPlan(device_plans={0: p0, 1: p1}, priorities={},
+                      devices=[0, 1])
+    prog = CompiledProgram(dag=dag, plan=plan, params={}, schedule=())
+    with pytest.raises(ScheduleRejected, match="dispatch order"):
+        MpmdExecutor(prog)
+
+
+def test_rank_orders_cover_all_tasks():
+    """The deadlock-free witness orders (``_rank_orders``) must be a
+    permutation of each rank's tasks, and pin every compute/collective
+    to the interpreter's replayed dispatch order (bit-parity)."""
+    from helpers import make_batch
+    from repro.core.plan import ROLE_RECV, ROLE_SEND
+    from repro.runtime.mpmd import MpmdExecutor
+
+    prog = _small_prog()
+    ex = MpmdExecutor(prog, handshake=False)
+    replay = ex._resolver.replay(make_batch(8))
+    orders = ex._rank_orders(replay)
+    for r in ex.devices:
+        want = sorted((t.node, t.role)
+                      for t in prog.plan.plan_for(r).tasks.values())
+        assert sorted(orders[r]) == want, r
+        pinned = [(n, role) for (n, role) in orders[r]
+                  if role not in (ROLE_SEND, ROLE_RECV)]
+        want_pin = [(n, role) for (n, d, role) in replay.exec_order
+                    if d == r and role not in (ROLE_SEND, ROLE_RECV)]
+        assert pinned == want_pin, r
